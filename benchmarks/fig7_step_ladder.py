@@ -1,0 +1,79 @@
+"""Paper Figs. 7/8: step-by-step optimization ladder, wall-clock on CPU.
+
+Times energy+forces per step for the implementation ladder
+  mlp -> quintic (tabulation) -> cheb (TPU-adapted tabulation)
+on copper-like and water-like systems and reports the speedup vs the mlp
+baseline. (cheb_pallas runs in interpret mode on CPU — Python-executed
+kernel bodies make its wall-clock meaningless here; its performance is
+captured by the dry-run roofline instead.)
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dp_model
+from repro.core.types import DPConfig
+from repro.md import lattice, neighbors
+
+LADDER = ("mlp", "quintic", "cheb")
+
+
+def _bench_one(cfg, params, pos, typ, nlist, box, impl, iters=5):
+    e, f, w = dp_model.dp_energy_forces(params, cfg, pos, nlist, typ, box,
+                                        impl=impl)
+    jax.block_until_ready(f)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        e, f, w = dp_model.dp_energy_forces(params, cfg, pos, nlist, typ,
+                                            box, impl=impl)
+    jax.block_until_ready(f)
+    return (time.perf_counter() - t0) / iters
+
+
+def run():
+    rows = []
+    systems = {
+        "copper": (DPConfig(ntypes=1, rcut=6.0, rcut_smth=2.0, sel=(256,),
+                            type_map=("Cu",), embed_widths=(32, 64, 128),
+                            axis_neuron=16, fit_widths=(240, 240, 240)),
+                   lambda: lattice.fcc_copper(4, 4, 4)),
+        "water": (DPConfig(ntypes=2, rcut=5.0, rcut_smth=0.5, sel=(46, 92),
+                           type_map=("O", "H"), embed_widths=(32, 64, 128),
+                           axis_neuron=16, fit_widths=(240, 240, 240)),
+                  lambda: lattice.water_box(2, 2, 2)),
+    }
+    for system, (cfg, mk) in systems.items():
+        pos, typ, box = mk()
+        rng = np.random.default_rng(0)
+        pos = np.mod(pos + rng.normal(0, 0.05, pos.shape), box)
+        spec = neighbors.NeighborSpec(rcut_nbr=cfg.rcut, sel=cfg.sel)
+        nlist, ovf = neighbors.brute_force_neighbors(
+            jnp.asarray(pos, jnp.float32), jnp.asarray(typ), spec,
+            jnp.asarray(box))
+        assert int(ovf) <= 0
+        pos_j = jnp.asarray(pos, jnp.float32)
+        typ_j = jnp.asarray(typ)
+        box_j = jnp.asarray(box, jnp.float32)
+        params = dp_model.init_dp_params(jax.random.PRNGKey(0), cfg)
+        ptab = {
+            "mlp": params,
+            "quintic": dp_model.tabulate_model(params, cfg, "quintic"),
+            "cheb": dp_model.tabulate_model(params, cfg, "cheb"),
+        }
+        base = None
+        for impl in LADDER:
+            dt = _bench_one(cfg, ptab[impl], pos_j, typ_j, nlist, box_j, impl)
+            if base is None:
+                base = dt
+            rows.append({
+                "bench": "fig7_step_ladder", "system": system, "impl": impl,
+                "n_atoms": len(pos), "s_per_step": dt,
+                "us_per_step_atom": dt * 1e6 / len(pos),
+                "speedup_vs_mlp": base / dt,
+            })
+    return rows

@@ -1,0 +1,45 @@
+"""The 40-cell LM roofline table (EXPERIMENTS.md Sec. Roofline source).
+
+Reads the dry-run JSON artifacts and emits one row per (arch x shape x
+mesh): three terms, dominant bottleneck, useful-FLOPs ratio, memory."""
+
+from __future__ import annotations
+
+import json
+import os
+
+
+def run(path=None):
+    import os as _os
+    if path is None:
+        path = ("experiments/dryrun_optimized.json"
+                if _os.path.exists("experiments/dryrun_optimized.json")
+                else "experiments/dryrun_baseline.json")
+    if not os.path.exists(path):
+        return [{"bench": "lm_roofline", "note": f"{path} missing — run "
+                 "python -m repro.launch.dryrun --mesh both --out " + path}]
+    with open(path) as f:
+        cells = json.load(f)
+    rows = []
+    for c in cells:
+        if c.get("status") == "skipped":
+            rows.append({"bench": "lm_roofline", "cell": c["cell"],
+                         "status": "skipped"})
+            continue
+        if c.get("status") != "ok":
+            rows.append({"bench": "lm_roofline", "cell": c["cell"],
+                         "status": c.get("status")})
+            continue
+        rows.append({
+            "bench": "lm_roofline", "cell": c["cell"], "status": "ok",
+            "t_compute_ms": round(c["t_compute"] * 1e3, 2),
+            "t_memory_ms": round(c["t_memory"] * 1e3, 2),
+            "t_coll_ms": round((c["t_ici"] + c["t_dcn"]) * 1e3, 2),
+            "dominant": c["dominant"],
+            "useful_ratio": round(c["useful_ratio"], 3),
+            "mem_GiB": round(c["mem_GiB"], 2),
+            "compute_fraction": round(
+                c["t_compute"] / max(c["t_compute"], c["t_memory"],
+                                     c["t_ici"] + c["t_dcn"]), 3),
+        })
+    return rows

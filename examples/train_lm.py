@@ -1,0 +1,29 @@
+"""End-to-end LM training driver (~25M-param reduced config by default, a
+few hundred steps with checkpoint/restart — kill it mid-run and re-launch to
+watch it resume):
+
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+
+import argparse
+
+from repro.launch.train import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+    _, history = train_loop(
+        args.arch, reduced=True, steps=args.steps, global_batch=args.batch,
+        seq_len=args.seq, ckpt_dir=args.ckpt_dir, ckpt_every=100,
+        loss_chunk=64)
+    print(f"loss: {history[0]['loss']:.3f} -> {history[-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

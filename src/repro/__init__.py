@@ -1,0 +1,9 @@
+"""repro: a multi-pod JAX framework for Deep Potential molecular dynamics.
+
+Implements Guo et al., "Extending the limit of molecular dynamics with ab
+initio accuracy to 10 billion atoms" (PPoPP '22): tabulated Deep Potential
+models, fused descriptor kernels, redundancy removal, and spatial domain
+decomposition — plus a shared LM runtime for the assigned architecture pool.
+"""
+
+__version__ = "0.1.0"

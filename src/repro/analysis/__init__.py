@@ -1,0 +1,12 @@
+"""Roofline analysis: cost_analysis + HLO collective parsing -> three terms."""
+
+from repro.analysis.roofline import (
+    HW_V5E,
+    CollectiveStats,
+    RooflineReport,
+    analyze_compiled,
+    parse_collective_bytes,
+)
+
+__all__ = ["HW_V5E", "CollectiveStats", "RooflineReport",
+           "analyze_compiled", "parse_collective_bytes"]

@@ -1,0 +1,341 @@
+"""Trip-count-aware cost model over optimized HLO text.
+
+XLA CPU's ``HloCostAnalysis`` (what ``compiled.cost_analysis()`` surfaces)
+counts a ``while`` body ONCE, so an 80-layer ``lax.scan`` transformer is
+under-counted 80x. This module re-derives FLOPs / bytes-accessed /
+collective bytes by walking the computation graph with multiplicities:
+
+    entry x1; while body/cond x (multiplicity x trip_count);
+    call/async x multiplicity; conditional branches x multiplicity (max);
+    fusions contribute operand+result bytes at the call site and the dot
+    FLOPs of their subcomputation.
+
+Trip counts are read from the loop condition: the largest integer literal
+in the condition computation (jax scans lower to ``lt(i, N)``; loop
+transformations may peel an iteration — a <=1-iteration error we accept).
+
+FLOPs: dot ops only (2 * numel(result) * prod(contracting dims)) —
+elementwise/transcendental FLOPs are ignored, consistent with MXU-roofline
+accounting. Bytes: operands + results per materialization boundary, with
+dynamic-(update-)slice counted at the slice size, not the full buffer.
+
+TPU-fusion proxy: the CPU backend fuses far less aggressively than the TPU
+backend, so STANDALONE elementwise/convert/broadcast/compare ops (which TPU
+XLA folds into neighboring fusions or dot epilogues) contribute ZERO bytes;
+traffic is counted at dots, fusions, reduces, data-movement ops
+(slice/concat/copy/transpose/reshape/gather/scatter/sort) and collectives.
+This is the documented accounting for the §Roofline memory term.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.-]+)\s*=\s*(?P<type>\(?[^=]*?\)?)\s+"
+    r"(?P<kind>[\w-]+)\((?P<args>.*?)\)(?P<attrs>.*)$")
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.-]+)\s+\(.*\)\s+->\s+.*\{")
+_OPERAND_RE = re.compile(r"%([\w.-]+)")
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    kind: str
+    args: str
+    attrs: str
+    line: str
+
+
+@dataclasses.dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLL_OPS})
+    coll_lines: List[Tuple[float, str]] = dataclasses.field(default_factory=list)
+    # (multiplicity, raw line) per collective — consumed by the roofline's
+    # ICI/DCN splitter.
+
+    @property
+    def coll_total(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+
+def _type_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _numel(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, List[Op]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._symtabs: Dict[str, Dict[str, str]] = {}
+        self._trip_cache: Dict[str, int] = {}
+        self._fusion_flops_cache: Dict[str, float] = {}
+        self._convert_fusion_cache: Dict[str, bool] = {}
+
+    _CONVERT_ONLY = frozenset(("parameter", "convert", "bitcast", "tuple",
+                               "get-tuple-element", "copy", "transpose",
+                               "reshape", "broadcast"))
+
+    def _is_convert_fusion(self, callee: str) -> bool:
+        """True for fusions that only convert/relayout — CPU float-
+        normalization and dot-operand-upcast artifacts (bf16 buffers carried
+        at f32 through while loops, f32 transposed weight copies). A TPU
+        backend keeps bf16 natively and folds layouts into the MXU op, and
+        the CONSUMING dot already counts its operand reads, so counting
+        these fusions would double-count."""
+        if callee not in self._convert_fusion_cache:
+            ops = self.comps.get(callee, [])
+            self._convert_fusion_cache[callee] = bool(ops) and all(
+                op.kind in self._CONVERT_ONLY for op in ops)
+        return self._convert_fusion_cache[callee]
+
+    _INPLACE_EXTRAS = frozenset(("dynamic-update-slice", "dynamic-slice",
+                                 "constant", "pad", "iota", "add",
+                                 "multiply", "select", "compare"))
+
+    def _fusion_bytes(self, comp: str, op: Op, callee: str) -> float:
+        """Fusion traffic. Fusions that are slice-update plumbing around a
+        scan carry (DUS / dynamic-slice + converts/relayouts — CPU wraps
+        these in dtype roundtrips of the WHOLE carried buffer) are counted
+        at their slice sizes: on TPU the update is in place and bf16 stays
+        bf16. Anything containing real compute falls back to the standard
+        operands+result accounting."""
+        ops = self.comps.get(callee, [])
+        kinds = {o.kind for o in ops}
+        if "dynamic-update-slice" in kinds or "dynamic-slice" in kinds:
+            if all(k in self._CONVERT_ONLY or k in self._INPLACE_EXTRAS
+                   for k in kinds):
+                callee_tab = self._symtab(callee)
+                total = 0.0
+                for o in ops:
+                    if o.kind == "dynamic-update-slice":
+                        args = _OPERAND_RE.findall(o.args)
+                        upd = callee_tab.get(args[1], "") if len(args) > 1 else ""
+                        total += 2.0 * _type_bytes(upd)
+                    elif o.kind == "dynamic-slice":
+                        total += 2.0 * _type_bytes(o.type_str)
+                return total
+        return self._op_bytes(comp, op)
+
+    # ------------------------------------------------------------- parsing
+
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        # /*index=N*/ comments inside tuple types contain '=' and break the
+        # op regex — strip all inline comments up front.
+        text = re.sub(r"/\*.*?\*/", "", text)
+        for line in text.splitlines():
+            if cur is None:
+                m = _COMP_HEADER_RE.match(line)
+                if m:
+                    cur = m.group(1)
+                    self.comps[cur] = []
+                    if line.startswith("ENTRY"):
+                        self.entry = cur
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+            m = _OP_RE.match(line)
+            if m:
+                self.comps[cur].append(Op(
+                    name=m.group("name"), type_str=m.group("type").strip(),
+                    kind=m.group("kind"), args=m.group("args"),
+                    attrs=m.group("attrs"), line=line))
+        if self.entry is None:
+            # fall back: the last computation is usually entry
+            self.entry = next(reversed(self.comps)) if self.comps else None
+
+    def _symtab(self, comp: str) -> Dict[str, str]:
+        if comp not in self._symtabs:
+            self._symtabs[comp] = {op.name: op.type_str
+                                   for op in self.comps.get(comp, [])}
+        return self._symtabs[comp]
+
+    @staticmethod
+    def _attr_comp(attrs: str, key: str) -> Optional[str]:
+        m = re.search(key + r"=%?([\w.-]+)", attrs)
+        return m.group(1) if m else None
+
+    def trip_count(self, cond_comp: str) -> int:
+        if cond_comp in self._trip_cache:
+            return self._trip_cache[cond_comp]
+        best = 1
+        for op in self.comps.get(cond_comp, []):
+            if op.kind == "constant":
+                m = re.search(r"constant\((-?\d+)\)", op.line)
+                if m:
+                    best = max(best, int(m.group(1)))
+        self._trip_cache[cond_comp] = best
+        return best
+
+    # ------------------------------------------------------------ costing
+
+    def _dot_flops(self, comp: str, op: Op) -> float:
+        """2 * numel(result) * prod(contracting dims of lhs)."""
+        out_elems = _numel(op.type_str)
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+        operands = _OPERAND_RE.findall(op.args)
+        if not m or not operands:
+            return 2.0 * out_elems          # degenerate; still count something
+        lhs_type = self._symtab(comp).get(operands[0], "")
+        sm = _SHAPE_RE.search(lhs_type)
+        if not sm:
+            return 2.0 * out_elems
+        lhs_dims = [int(d) for d in sm.group(2).split(",") if d]
+        contract = 1
+        for i in m.group(1).split(","):
+            if i != "" and int(i) < len(lhs_dims):
+                contract *= lhs_dims[int(i)]
+        return 2.0 * out_elems * contract
+
+    def _fusion_flops(self, comp: str) -> float:
+        if comp in self._fusion_flops_cache:
+            return self._fusion_flops_cache[comp]
+        total = 0.0
+        for op in self.comps.get(comp, []):
+            if op.kind == "dot":
+                total += self._dot_flops(comp, op)
+            elif op.kind == "fusion":
+                callee = self._attr_comp(op.attrs, "calls")
+                if callee:
+                    total += self._fusion_flops(callee)
+        self._fusion_flops_cache[comp] = total
+        return total
+
+    # Ops whose bytes a TPU backend would fold into a neighboring fusion —
+    # counted as zero here (see module docstring).
+    _FUSED_ON_TPU = frozenset((
+        "add", "subtract", "multiply", "divide", "maximum", "minimum",
+        "exponential", "exp", "expm1", "tanh", "negate", "abs", "power",
+        "sqrt", "rsqrt", "log", "log1p", "logistic", "sign", "floor", "ceil",
+        "round-nearest-afz", "round-nearest-even", "select", "compare",
+        "convert", "and", "or", "not", "xor", "iota", "broadcast", "clamp",
+        "is-finite", "shift-left", "shift-right-logical",
+        "shift-right-arithmetic", "cosine", "sine", "atan2", "remainder",
+        "rng-bit-generator", "rng-get-and-update-state", "map", "pad",
+        "reduce-precision", "stochastic-convert", "real", "imag",
+    ))
+
+    def _op_bytes(self, comp: str, op: Op) -> float:
+        """Operand + result bytes at a materialization boundary."""
+        if op.kind in ("parameter", "tuple", "get-tuple-element", "bitcast",
+                       "constant", "while", "conditional", "call", "after-all",
+                       "add-dependency", "custom-call", "async-start",
+                       "async-done", "async-update", "partition-id",
+                       "replica-id", "domain", "opt-barrier"):
+            return 0.0
+        if op.kind in self._FUSED_ON_TPU:
+            return 0.0
+        symtab = self._symtab(comp)
+        operand_names = _OPERAND_RE.findall(op.args)
+        if op.kind in ("dynamic-update-slice",):
+            # read+write the update slice, not the whole buffer
+            upd = symtab.get(operand_names[1], "") if len(operand_names) > 1 else ""
+            return 2.0 * _type_bytes(upd)
+        if op.kind in ("dynamic-slice",):
+            return 2.0 * _type_bytes(op.type_str)
+        total = _type_bytes(op.type_str)
+        for name in operand_names:
+            total += _type_bytes(symtab.get(name, ""))
+        return total
+
+    def _walk(self, comp: str, mult: float, totals: CostTotals,
+              depth: int = 0) -> None:
+        if depth > 64:
+            return
+        for op in self.comps.get(comp, []):
+            kind = op.kind
+            base = kind[:-len("-start")] if kind.endswith("-start") else kind
+            if base in _COLL_OPS:
+                size = _type_bytes(op.type_str)
+                if base == "all-to-all" or not kind.endswith("-done"):
+                    totals.coll_bytes[base] += mult * size
+                    totals.coll_lines.append((mult, op.line))
+                totals.bytes_accessed += mult * 2.0 * size
+                continue
+            if kind == "while":
+                body = self._attr_comp(op.attrs, "body")
+                cond = self._attr_comp(op.attrs, "condition")
+                trip = self.trip_count(cond) if cond else 1
+                if body:
+                    self._walk(body, mult * trip, totals, depth + 1)
+                if cond:
+                    self._walk(cond, mult * trip, totals, depth + 1)
+                continue
+            if kind == "conditional":
+                branches = re.findall(r"branch_computations=\{([^}]*)\}",
+                                      op.attrs)
+                names = (_OPERAND_RE.findall(branches[0]) if branches else
+                         [c for c in [self._attr_comp(op.attrs, "true_computation"),
+                                      self._attr_comp(op.attrs, "false_computation")]
+                          if c])
+                for name in names:
+                    self._walk(name, mult, totals, depth + 1)
+                continue
+            if kind == "call":
+                callee = self._attr_comp(op.attrs, "to_apply")
+                if callee:
+                    self._walk(callee, mult, totals, depth + 1)
+                continue
+            if kind == "fusion":
+                callee = self._attr_comp(op.attrs, "calls")
+                if callee:
+                    totals.flops += mult * self._fusion_flops(callee)
+                    if self._is_convert_fusion(callee):
+                        continue
+                    totals.bytes_accessed += mult * self._fusion_bytes(
+                        comp, op, callee)
+                else:
+                    totals.bytes_accessed += mult * self._op_bytes(comp, op)
+                continue
+            if kind == "dot":
+                totals.flops += mult * self._dot_flops(comp, op)
+            totals.bytes_accessed += mult * self._op_bytes(comp, op)
+
+    def totals(self) -> CostTotals:
+        t = CostTotals()
+        if self.entry:
+            self._walk(self.entry, 1.0, t)
+        return t
+
+
+def analyze_text(hlo_text: str) -> CostTotals:
+    return HloCostModel(hlo_text).totals()

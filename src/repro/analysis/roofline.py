@@ -1,0 +1,280 @@
+"""Roofline terms from a compiled dry-run artifact (no real hardware).
+
+    compute term    = HLO_FLOPs / peak_FLOP/s            [s, per chip]
+    memory term     = HLO_bytes / HBM_bw                 [s, per chip]
+    collective term = collective_bytes / link_bw         [s, per chip]
+
+``compiled.cost_analysis()`` is already per-partition (the SPMD partitioner
+runs before codegen), so FLOPs/bytes are per-chip numbers; collective bytes
+are parsed from the optimized HLO text and are also per-chip (each op's
+result shape is the per-shard buffer).
+
+Accounting caveats (recorded once here, referenced from EXPERIMENTS.md):
+  * The CPU backend legalizes bf16 dots via f32 upcasts, so some buffers
+    and collectives that would be bf16 on TPU are counted at f32 width —
+    a <=2x overestimate on affected terms. Before/after comparisons in the
+    perf log use identical accounting, so deltas are unaffected.
+  * all-reduce moves ~2x its buffer over the wire (reduce+broadcast phases);
+    ring all-gather/reduce-scatter move (N-1)/N of the full buffer. We apply
+    these wire-factors per op kind.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float          # per chip, bf16
+    hbm_bw: float              # bytes/s per chip
+    ici_bw: float              # bytes/s per link
+    dcn_bw: float              # bytes/s per host (pod-crossing traffic)
+    hbm_bytes: float           # capacity per chip
+
+
+HW_V5E = Hardware(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9,
+                  ici_bw=50e9, dcn_bw=25e9, hbm_bytes=16 * 2**30)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# result = dtype[d0,d1]{layout} opname(...)   (also tuple results for -start)
+_OP_RE = re.compile(
+    r"=\s*(?P<rhs>\(?[a-z0-9]+\[[^\]]*\][^ ]*\)?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<start>-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float]
+    wire_bytes_ici: float        # per-chip wire bytes on intra-pod links
+    wire_bytes_dcn: float        # per-chip wire bytes crossing the pod axis
+    count: int
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+
+def _shape_bytes(rhs: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(rhs):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_crosses_pod(line: str, mesh_shape: Optional[Tuple[int, ...]],
+                       pod_index: int = 0) -> Tuple[int, bool]:
+    """(group_size, crosses_pod) from the replica_groups attribute.
+
+    Device ids are raveled over the mesh axes in order, so a group crosses
+    the pod boundary iff its members differ in coordinate ``pod_index``.
+    """
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        g, n, dims_s, perm_s = m.groups()
+        g, n = int(g), int(n)
+        dims = tuple(int(x) for x in dims_s.split(","))
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if perm_s:
+            ids = ids.transpose(tuple(int(x) for x in perm_s.split(",")))
+        groups = ids.reshape(g, n)
+    else:
+        m = _GROUPS_LIST_RE.search(line)
+        if not m:
+            return 1, False
+        groups = [
+            [int(x) for x in grp.strip("{}").split(",") if x.strip()]
+            for grp in re.findall(r"\{[^}]*\}", m.group(1))
+        ]
+        n = max(len(gr) for gr in groups)
+        groups = np.array([gr + gr[-1:] * (n - len(gr)) for gr in groups])
+    if mesh_shape is None or len(mesh_shape) < 3:
+        return groups.shape[1], False
+    pods = np.unravel_index(groups.astype(np.int64), mesh_shape)[pod_index]
+    crosses = bool(np.any(pods != pods[:, :1]))
+    return groups.shape[1], crosses
+
+
+def parse_collective_bytes(hlo_text: str,
+                           mesh_shape: Optional[Tuple[int, ...]] = None
+                           ) -> CollectiveStats:
+    """Sum per-chip collective buffer bytes from optimized HLO text.
+
+    ``-start`` ops are counted; their ``-done`` halves are not (the _OP_RE
+    only matches the op names at the call position, and done ops reference
+    the start value, not the op name). Wire bytes apply per-kind factors:
+    all-reduce 2x(N-1)/N, gather/scatter (N-1)/N, all-to-all (N-1)/N,
+    collective-permute 1x.
+    """
+    by_kind: Dict[str, float] = {k: 0.0 for k in _COLL_KINDS}
+    wire_ici = 0.0
+    wire_dcn = 0.0
+    count = 0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        size = _shape_bytes(m.group("rhs"))
+        if size == 0.0:
+            continue
+        count += 1
+        by_kind[op] += size
+        n, crosses = _group_crosses_pod(line, mesh_shape)
+        n = max(n, 2)
+        if op == "all-reduce":
+            wire = 2.0 * size * (n - 1) / n
+        elif op in ("all-gather", "reduce-scatter", "all-to-all"):
+            wire = size * (n - 1) / n
+        else:  # collective-permute
+            wire = size
+        if crosses:
+            wire_dcn += wire
+        else:
+            wire_ici += wire
+    return CollectiveStats(bytes_by_kind=by_kind, wire_bytes_ici=wire_ici,
+                           wire_bytes_dcn=wire_dcn, count=count)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    name: str
+    n_chips: int
+    hlo_flops: float             # per chip
+    hlo_bytes: float             # per chip
+    collectives: CollectiveStats
+    model_flops: float           # 6*N*D (or 6*N_active*D), whole step, global
+    t_compute: float
+    t_memory: float
+    t_ici: float
+    t_dcn: float
+    peak_mem_bytes: float
+    hw: Hardware
+
+    @property
+    def t_collective(self) -> float:
+        return self.t_ici + self.t_dcn
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs x chips): remat/redundancy waste catch."""
+        total = self.hlo_flops * self.n_chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute-term share of the step's critical path: 1.0 = compute-bound
+        at peak; the score we hillclimb."""
+        bt = self.bound_time
+        return self.t_compute / bt if bt > 0 else 0.0
+
+    def fits_hbm(self) -> bool:
+        return self.peak_mem_bytes <= self.hw.hbm_bytes
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "name": self.name, "chips": self.n_chips,
+            "flops/chip": self.hlo_flops, "bytes/chip": self.hlo_bytes,
+            "coll_bytes/chip": self.collectives.total_bytes,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_ici": self.t_ici, "t_dcn": self.t_dcn,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_flops_ratio,
+            "mem_GiB": self.peak_mem_bytes / 2**30,
+            "fits_16GiB": self.fits_hbm(),
+        }
+
+
+def _wire_factor(op: str, n: int) -> float:
+    n = max(n, 2)
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if op in ("all-gather", "reduce-scatter", "all-to-all"):
+        return (n - 1) / n
+    return 1.0   # collective-permute
+
+
+def collectives_from_cost(totals, mesh_shape: Optional[Tuple[int, ...]] = None
+                          ) -> CollectiveStats:
+    """CollectiveStats from a trip-count-aware HLO cost walk.
+
+    ``totals.coll_lines`` carries (multiplicity, raw line); the ICI/DCN
+    split re-parses replica groups per line.
+    """
+    by_kind: Dict[str, float] = dict(totals.coll_bytes)
+    wire_ici = 0.0
+    wire_dcn = 0.0
+    for mult, line in totals.coll_lines:
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        size = _shape_bytes(m.group("rhs"))
+        n, crosses = _group_crosses_pod(line, mesh_shape)
+        wire = mult * size * _wire_factor(op, n)
+        if crosses:
+            wire_dcn += wire
+        else:
+            wire_ici += wire
+    return CollectiveStats(bytes_by_kind=by_kind, wire_bytes_ici=wire_ici,
+                           wire_bytes_dcn=wire_dcn,
+                           count=len(totals.coll_lines))
+
+
+def analyze_compiled(name: str, compiled, n_chips: int, model_flops: float,
+                     mesh_shape: Optional[Tuple[int, ...]] = None,
+                     hw: Hardware = HW_V5E) -> RooflineReport:
+    from repro.analysis import hlo_cost
+
+    totals = hlo_cost.analyze_text(compiled.as_text())
+    flops = totals.flops
+    byts = totals.bytes_accessed
+    stats = collectives_from_cost(totals, mesh_shape)
+    ma = compiled.memory_analysis()
+    peak = 0.0
+    if ma is not None:
+        peak = float(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                     + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+    return RooflineReport(
+        name=name, n_chips=n_chips, hlo_flops=flops, hlo_bytes=byts,
+        collectives=stats, model_flops=model_flops,
+        t_compute=flops / hw.peak_flops,
+        t_memory=byts / hw.hbm_bw,
+        t_ici=stats.wire_bytes_ici / hw.ici_bw,
+        t_dcn=stats.wire_bytes_dcn / hw.dcn_bw,
+        peak_mem_bytes=peak, hw=hw)

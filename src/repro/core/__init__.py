@@ -1,0 +1,17 @@
+"""Deep Potential core: descriptor, embedding/fitting nets, tabulation, model."""
+
+from repro.core.types import DPConfig
+from repro.core.dp_model import (
+    init_dp_params,
+    dp_energy,
+    dp_energy_forces,
+    tabulate_model,
+)
+
+__all__ = [
+    "DPConfig",
+    "init_dp_params",
+    "dp_energy",
+    "dp_energy_forces",
+    "tabulate_model",
+]

@@ -1,0 +1,49 @@
+"""Embedding net: the scalar->R^M map g (paper Eq. 3-5).
+
+The embedding net maps each component of s(r_ij) to one row of the
+embedding matrix G_i. It is exactly the function the paper tabulates:
+a 3-hidden-layer residual MLP with widths (d1, 2*d1, 4*d1).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layers
+from repro.core.types import DPConfig
+
+
+def init_embedding_params(key: jax.Array, cfg: DPConfig, dtype: Any) -> Dict[str, List]:
+    """One residual MLP per embedding-net index.
+
+    type_one_side=True : index = neighbor type            (ntypes nets)
+    type_one_side=False: index = center * ntypes + nbr    (ntypes^2 nets)
+    """
+    nets = {}
+    keys = jax.random.split(key, cfg.n_embed_nets)
+    for i in range(cfg.n_embed_nets):
+        nets[str(i)] = layers.init_mlp(keys[i], cfg.embed_widths, 1, dtype)
+    return nets
+
+
+def embed_net_apply(net: List[Dict[str, jax.Array]], s: jax.Array) -> jax.Array:
+    """Apply one embedding net to scalars s (...,) -> G rows (..., M)."""
+    return layers.resnet_mlp(net, s[..., None])
+
+
+def embedding_scalar_fn(net: List[Dict[str, jax.Array]]) -> Callable[[jax.Array], jax.Array]:
+    """g: R -> R^M as a function of a batch of scalars — the tabulation target."""
+
+    def g(x: jax.Array) -> jax.Array:
+        return embed_net_apply(net, x)
+
+    return g
+
+
+def embed_index(cfg: DPConfig, center_type: int, nbr_type: int) -> int:
+    if cfg.type_one_side:
+        return nbr_type
+    return center_type * cfg.ntypes + nbr_type

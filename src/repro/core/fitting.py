@@ -1,0 +1,43 @@
+"""Fitting net: descriptor -> atomic energy E_i (paper Sec. 2.1, Fig. 1d)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layers
+from repro.core.types import DPConfig
+
+
+def init_fitting_params(key: jax.Array, cfg: DPConfig, dtype: Any) -> Dict[str, Dict]:
+    """One fitting net per center atom type: 3 hidden layers + linear head."""
+    nets = {}
+    keys = jax.random.split(key, cfg.ntypes)
+    for t in range(cfg.ntypes):
+        k_hidden, k_head = jax.random.split(keys[t])
+        hidden = layers.init_mlp(k_hidden, cfg.fit_widths, cfg.descriptor_dim, dtype)
+        head = layers.init_linear(k_head, int(cfg.fit_widths[-1]), 1, dtype)
+        nets[str(t)] = {"hidden": hidden, "head": head}
+    return nets
+
+
+def fitting_apply(net: Dict[str, Dict], d: jax.Array) -> jax.Array:
+    """Descriptor (..., M< * M) -> per-atom energy (...,)."""
+    h = layers.resnet_mlp(net["hidden"], d)
+    e = layers.linear(net["head"], h)
+    return e[..., 0]
+
+
+def fitting_energy(
+    fit_params: Dict[str, Dict], cfg: DPConfig, d: jax.Array, atype: jax.Array
+) -> jax.Array:
+    """Per-atom energies with the net selected by center type (one-hot mix)."""
+    if cfg.ntypes == 1:
+        return fitting_apply(fit_params["0"], d)
+    e = jnp.zeros(d.shape[:-1], dtype=d.dtype)
+    for t in range(cfg.ntypes):
+        e_t = fitting_apply(fit_params[str(t)], d)
+        e = jnp.where(atype == t, e_t, e)
+    return e

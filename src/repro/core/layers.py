@@ -1,0 +1,53 @@
+"""Shared MLP building blocks for embedding and fitting nets."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def init_linear(key: jax.Array, d_in: int, d_out: int, dtype: Any) -> Dict[str, jax.Array]:
+    """DeePMD-style init: weights ~ N(0, 1/sqrt(d_in+d_out)), bias ~ N(0, 1)."""
+    kw, kb = jax.random.split(key)
+    std = 1.0 / jnp.sqrt(float(d_in + d_out))
+    return {
+        "w": (jax.random.normal(kw, (d_in, d_out)) * std).astype(dtype),
+        "b": (jax.random.normal(kb, (d_out,)) * 0.1).astype(dtype),
+    }
+
+
+def init_mlp(key: jax.Array, widths: Sequence[int], d_in: int, dtype: Any) -> List[Dict[str, jax.Array]]:
+    keys = jax.random.split(key, len(widths))
+    layers = []
+    prev = d_in
+    for k, w in zip(keys, widths):
+        layers.append(init_linear(k, prev, int(w), dtype))
+        prev = int(w)
+    return layers
+
+
+def resnet_mlp(layers: List[Dict[str, jax.Array]], x: jax.Array) -> jax.Array:
+    """DeePMD residual MLP (paper Eq. 4-5).
+
+    Layer widths may repeat (identity shortcut), double (duplicated shortcut
+    ``(x, x)``), or change arbitrarily (no shortcut, first layer).
+    tanh activation throughout (paper Sec. 3.5.3: chosen for accuracy).
+    """
+    h = x
+    for lyr in layers:
+        d_in = lyr["w"].shape[0]
+        d_out = lyr["w"].shape[1]
+        y = jnp.tanh(h @ lyr["w"] + lyr["b"])
+        if d_out == d_in:
+            h = h + y
+        elif d_out == 2 * d_in:
+            h = jnp.concatenate([h, h], axis=-1) + y
+        else:
+            h = y
+    return h
+
+
+def linear(params: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    return x @ params["w"] + params["b"]

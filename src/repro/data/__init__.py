@@ -1,0 +1,5 @@
+"""Data pipelines: deterministic synthetic token streams + DP teacher data."""
+
+from repro.data.tokens import TokenPipeline
+
+__all__ = ["TokenPipeline"]

@@ -1,0 +1,60 @@
+"""Deterministic synthetic LM token pipeline.
+
+Batches are a pure function of (seed, step) — restart from a checkpoint at
+step k replays exactly the batches k, k+1, ... that the failed run would
+have seen (bitwise-reproducible restart, the fault-tolerance contract).
+The generator is a Markov-ish mixture so the loss has real structure to
+learn (not uniform noise): token t+1 = (a * t + noise) mod V with
+per-sequence drift, giving compressible statistics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPipeline:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    frontend: str = "none"       # none | vision_stub | audio_stub
+    d_model: int = 0
+    n_frames: int = 0
+
+    def batch(self, step: int) -> Dict[str, jax.Array]:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        b, s = self.global_batch, self.seq_len
+        drift = jax.random.randint(k1, (b, 1), 1, 7)
+        base = jax.random.randint(k2, (b, 1), 0, self.vocab)
+        noise = jax.random.randint(k3, (b, s + 1), 0, 17)
+        idx = jnp.arange(s + 1)[None, :]
+        stream = (base + drift * idx + noise) % self.vocab
+        out: Dict[str, jax.Array] = {
+            "labels": stream[:, 1:].astype(jnp.int32),
+        }
+        if self.frontend == "vision_stub":
+            out["embeds"] = jax.random.normal(
+                k4, (b, s, self.d_model), jnp.bfloat16) * 0.02
+        else:
+            out["tokens"] = stream[:, :-1].astype(jnp.int32)
+        if self.frontend == "audio_stub":
+            out["frames"] = jax.random.normal(
+                k4, (b, self.n_frames, self.d_model), jnp.float32) * 0.02
+        return out
+
+
+def pipeline_for(cfg, seq_len: int, global_batch: int, seed: int = 0
+                 ) -> TokenPipeline:
+    return TokenPipeline(
+        vocab=cfg.vocab, seq_len=seq_len, global_batch=global_batch,
+        seed=seed,
+        frontend=cfg.frontend if cfg.frontend != "none" else
+        ("audio_stub" if cfg.family == "encdec" else "none"),
+        d_model=cfg.d_model, n_frames=cfg.n_audio_frames)

@@ -1,0 +1,11 @@
+"""Fused tabulated-embedding + descriptor-contraction Pallas kernel.
+
+The TPU realization of the paper's Sec. 3.4.1 kernel fusion + Sec. 3.4.2
+redundancy removal: T_i = R~_i^T G_i with G_i evaluated from the Chebyshev
+table on the fly in VMEM — G_i never touches HBM; neighbor blocks past each
+atom tile's real-neighbor count are skipped.
+"""
+
+from repro.kernels.dp_fused.ops import fused_env_tab_contract
+
+__all__ = ["fused_env_tab_contract"]

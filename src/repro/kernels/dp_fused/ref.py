@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the fused tabulation+contraction kernel.
+
+This is also the XLA execution path (impl="cheb") used on CPU and in the
+multi-pod dry-run; the Pallas kernel must match it to float tolerance.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tabulation
+
+
+def fused_env_tab_contract_ref(
+    env: jax.Array,
+    s: jax.Array,
+    coeffs: jax.Array,
+    lower: float,
+    upper: float,
+) -> jax.Array:
+    """T = R~^T G with G = ChebBasis(s) @ C.
+
+    env: (..., N, 4); s: (..., N); coeffs: (K, M). Returns (..., 4, M).
+    """
+    table = {"coeffs": coeffs, "lower": lower, "upper": upper}
+    g = tabulation.cheb_eval(table, s)                      # (..., N, M)
+    return jnp.einsum("...na,...nm->...am", env, g)

@@ -1,0 +1,328 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count at first init, and the production meshes need 512
+placeholder host devices. Nothing else in the package sets XLA_FLAGS
+globally; smoke tests and benches see 1 device.
+
+For every cell this driver:
+  1. builds the model + sharding plan,
+  2. ``jax.jit(step, in_shardings, out_shardings).lower(**input_specs())``,
+  3. ``.compile()``  — proving the collective/sharding program is coherent,
+  4. records ``memory_analysis()`` (fits-in-HBM proof), ``cost_analysis()``
+     (FLOPs/bytes) and the parsed collective schedule for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.analysis import roofline as rl
+from repro.launch import mesh as mesh_mod
+from repro.models import build
+from repro.models.lm_types import ASSIGNED_SHAPES, LMConfig, ShapeSpec
+from repro.sharding import plans as plans_mod
+from repro.sharding import ctx as sh_ctx
+from repro.train import optim
+from repro.train.steps import TrainState, init_train_state, make_train_step
+
+
+# --------------------------------------------------------------------- skips
+
+def cell_skip_reason(cfg: LMConfig, shape: ShapeSpec, api) -> Optional[str]:
+    if shape.name == "long_500k" and not api.sub_quadratic:
+        return ("full-attention family: a 524288-token KV cache with full "
+                "attention is outside the model family semantics "
+                "(DESIGN.md §Arch-applicability)")
+    if shape.kind == "decode" and not api.has_decode:
+        return "encoder-only architecture: no decode step"
+    return None
+
+
+# ------------------------------------------------------------------- specs
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: LMConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs: Dict[str, Any] = {"labels": _sds((b, s), jnp.int32)}
+        if cfg.frontend == "vision_stub":
+            specs["embeds"] = _sds((b, s, cfg.d_model), cfg.dtype)
+        else:
+            specs["tokens"] = _sds((b, s), jnp.int32)
+        if cfg.family == "encdec":
+            specs["frames"] = _sds((b, cfg.n_audio_frames, cfg.d_model), cfg.dtype)
+        return specs
+    if shape.kind == "prefill":
+        specs = {}
+        if cfg.frontend == "vision_stub":
+            specs["embeds"] = _sds((b, s, cfg.d_model), cfg.dtype)
+        else:
+            specs["tokens"] = _sds((b, s), jnp.int32)
+        if cfg.family == "encdec":
+            specs["frames"] = _sds((b, cfg.n_audio_frames, cfg.d_model), cfg.dtype)
+        return specs
+    # decode: one new token against a seq_len cache
+    return {"tokens": _sds((b, 1), jnp.int32)}
+
+
+def _batch_shardings(plan, cfg: LMConfig, specs: Dict[str, Any]):
+    mesh = plan.mesh
+    out = {}
+    for k, v in specs.items():
+        extra = len(v.shape) - 1
+        out[k] = NamedSharding(mesh, plans_mod.batch_spec(plan, v.shape[0], extra))
+    return out
+
+
+def _generic_state_spec(plan, shape: Tuple[int, ...], batch: int) -> P:
+    """Decode-state leaf: FIRST dim equal to the batch size shards over
+    data(+pod) — caches may carry a leading layer-stack dim (encdec:
+    (L, B, S, H, hd); leaving B replicated cost a 6.4 GB/token cache
+    all-gather on whisper decode before this rule looked past dim0) —
+    then the largest remaining dim shards over model when divisible."""
+    spec = [None] * len(shape)
+    axes = plan.batch_axes
+    for i, d in enumerate(shape):
+        if d == batch:
+            if batch % plan.axis_size(axes) == 0:
+                spec[i] = axes if len(axes) > 1 else axes[0]
+            elif batch % plan.axis_size("data") == 0:
+                spec[i] = "data"
+            break
+    rest = [i for i in range(len(shape)) if spec[i] is None]
+    if rest:
+        big = max(rest, key=lambda i: shape[i])
+        if shape[big] % plan.axis_size("model") == 0 and shape[big] > 1:
+            spec[big] = "model"
+    return P(*spec)
+
+
+def cache_shardings(plan, cfg: LMConfig, cache_shapes, batch: int, seq: int):
+    from repro.models import attention as attn_mod
+
+    if isinstance(cache_shapes, attn_mod.KVCache):
+        kv = NamedSharding(plan.mesh,
+                           plans_mod.kv_cache_spec(plan, batch, seq, cfg.n_kv_heads))
+        rep = NamedSharding(plan.mesh, P())
+        return attn_mod.KVCache(k=kv, v=kv, length=rep)
+
+    def leaf(x):
+        if not hasattr(x, "shape") or len(x.shape) == 0:
+            return NamedSharding(plan.mesh, P())
+        return NamedSharding(plan.mesh, _generic_state_spec(plan, x.shape, batch))
+
+    return jax.tree.map(leaf, cache_shapes)
+
+
+# --------------------------------------------------------------------- cells
+
+def model_flops(cfg: LMConfig, shape: ShapeSpec) -> float:
+    n = cfg.n_active_params()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    per_token = 6 * n if shape.kind == "train" else 2 * n
+    return float(per_token) * tokens
+
+
+def lower_cell(arch: str, shape: ShapeSpec, mesh, multi_pod: bool,
+               verbose: bool = True) -> Dict[str, Any]:
+    cfg = configs.get(arch)
+    api = build(cfg)
+    reason = cell_skip_reason(cfg, shape, api)
+    name = f"{arch}/{shape.name}/{'2x16x16' if multi_pod else '16x16'}"
+    if reason is not None:
+        return {"cell": name, "status": "skipped", "reason": reason}
+
+    if shape.kind != "train":
+        # serving runs bf16 weights (no optimizer states to feed) — halves
+        # the weight footprint; f32 master params are a training concern.
+        cfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+        api = build(cfg)
+    plan_mode = "train" if shape.kind == "train" else "serve"
+    plan = plans_mod.make_plan(mesh, plan_mode)
+    # Sequence-parallel residuals: dense family only. MoE keeps tokens local
+    # to a shard (the sort-based dispatch must not cross shards); hybrid
+    # shards the RG-LRU width dr over `model` instead (two `model` uses
+    # would conflict); ssm/encdec are too small to need SP. Decode always
+    # enables the seq role: it drives the sequence-sharded KV cache (the
+    # (B, 1, d) residuals are unshardable on seq anyway).
+    shard_seq = cfg.family == "dense" or shape.kind == "decode"
+    rules = sh_ctx.ActivationRules(mesh=mesh, batch_axes=plan.batch_axes,
+                                   shard_seq=shard_seq)
+    key = jax.random.PRNGKey(0)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        opt = optim.AdamW(lr=optim.cosine_schedule(3e-4, 2000, 100_000))
+        state_shapes = jax.eval_shape(
+            lambda k: init_train_state(api, opt, k), key)
+        p_sh = plans_mod.param_shardings(plan, state_shapes.params)
+        rep = NamedSharding(mesh, P())
+        state_sh = TrainState(
+            params=p_sh,
+            opt=optim.AdamWState(mu=p_sh, nu=p_sh, count=rep),
+            step=rep)
+        specs = input_specs(cfg, shape)
+        batch_sh = _batch_shardings(plan, cfg, specs)
+        step_fn = make_train_step(api, opt)
+        metric_sh = {k: rep for k in ("loss", "ce", "moe_aux", "grad_norm")}
+        jitted = jax.jit(step_fn,
+                         in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, metric_sh),
+                         donate_argnums=(0,))
+        with sh_ctx.activation_rules(rules):
+            lowered = jitted.lower(state_shapes, specs)
+
+    elif shape.kind == "prefill":
+        params_shapes = jax.eval_shape(api.init, key)
+        p_sh = plans_mod.param_shardings(plan, params_shapes)
+        specs = input_specs(cfg, shape)
+        in_sh = _batch_shardings(plan, cfg, specs)
+
+        if cfg.family in ("dense", "moe") and "tokens" in specs:
+            from repro.models import transformer as tf_mod
+
+            def step_fn(params, inputs):
+                return tf_mod.prefill(params, cfg, inputs["tokens"], shape.seq_len)
+
+            cache_shapes = jax.eval_shape(step_fn, params_shapes, specs)[1]
+            c_sh = cache_shardings(plan, cfg, cache_shapes,
+                                   shape.global_batch, shape.seq_len)
+            out_sh = (NamedSharding(mesh, plans_mod.logits_spec(
+                plan, cfg.vocab, with_seq=False,
+                batch=shape.global_batch)), c_sh)
+        else:
+            def step_fn(params, inputs):
+                logits, _ = api.forward(params, **inputs)
+                return logits[:, -1]
+
+            out_sh = NamedSharding(mesh, plans_mod.logits_spec(
+                plan, cfg.vocab, with_seq=False, batch=shape.global_batch))
+        jitted = jax.jit(step_fn, in_shardings=(p_sh, in_sh),
+                         out_shardings=out_sh)
+        with sh_ctx.activation_rules(rules):
+            lowered = jitted.lower(params_shapes, specs)
+
+    else:  # decode
+        params_shapes = jax.eval_shape(api.init, key)
+        p_sh = plans_mod.param_shardings(plan, params_shapes)
+        cache_shapes = jax.eval_shape(
+            lambda p: api.init_cache(p, shape.global_batch, shape.seq_len),
+            params_shapes)
+        c_sh = cache_shardings(plan, cfg, cache_shapes,
+                               shape.global_batch, shape.seq_len)
+        tok_sh = NamedSharding(mesh, plans_mod.batch_spec(plan, shape.global_batch, 1))
+        logits_sh = NamedSharding(mesh, plans_mod.logits_spec(
+            plan, cfg.vocab, with_seq=False, batch=shape.global_batch))
+
+        def step_fn(params, tokens, cache):
+            return api.decode_step(params, tokens, cache)
+
+        jitted = jax.jit(step_fn,
+                         in_shardings=(p_sh, tok_sh, c_sh),
+                         out_shardings=(logits_sh, c_sh),
+                         donate_argnums=(2,))
+        tok_spec = input_specs(cfg, shape)["tokens"]
+        with sh_ctx.activation_rules(rules):
+            lowered = jitted.lower(params_shapes, tok_spec, cache_shapes)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mesh_shape = tuple(mesh.shape[a] for a in mesh.axis_names)
+    report = rl.analyze_compiled(
+        name, compiled, n_chips=mesh.size,
+        model_flops=model_flops(cfg, shape), mesh_shape=mesh_shape)
+    ma = compiled.memory_analysis()
+    row = report.row()
+    row.update({
+        "cell": name, "status": "ok",
+        "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
+        "arg_bytes": int(ma.argument_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "out_bytes": int(ma.output_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "coll_by_kind": {k: v for k, v in
+                         report.collectives.bytes_by_kind.items() if v},
+        "coll_count": report.collectives.count,
+    })
+    if verbose:
+        print(f"[ok] {name}: compile {t_compile:.0f}s  "
+              f"mem/chip {row['mem_GiB']:.2f} GiB  "
+              f"dominant={row['dominant']}  "
+              f"t=(c {report.t_compute*1e3:.2f} | m {report.t_memory*1e3:.2f} "
+              f"| coll {report.t_collective*1e3:.2f}) ms  "
+              f"useful={row['useful_ratio']:.2f}", flush=True)
+    return row
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None,
+                    help="arch id (repeatable); default: all 10")
+    ap.add_argument("--shape", action="append", default=None,
+                    help="shape name (repeatable); default: all 4")
+    ap.add_argument("--mesh", choices=("pod", "multipod", "both"), default="pod")
+    ap.add_argument("--out", default=None, help="JSON output path")
+    args = ap.parse_args(argv)
+
+    archs = args.arch or [a.replace("_", "-").replace("-1p7b", "-1.7b")
+                          .replace("-a2p7b", "-a2.7b")
+                          for a in configs.all_archs()]
+    shapes = [s for s in ASSIGNED_SHAPES
+              if args.shape is None or s.name in args.shape]
+    meshes = []
+    if args.mesh in ("pod", "both"):
+        meshes.append((mesh_mod.make_production_mesh(multi_pod=False), False))
+    if args.mesh in ("multipod", "both"):
+        meshes.append((mesh_mod.make_production_mesh(multi_pod=True), True))
+
+    rows = []
+    failures = 0
+    for mesh, multi in meshes:
+        for arch in archs:
+            for shape in shapes:
+                try:
+                    rows.append(lower_cell(arch, shape, mesh, multi))
+                except Exception as e:  # a failure here is a bug in the system
+                    failures += 1
+                    name = f"{arch}/{shape.name}/{'2x16x16' if multi else '16x16'}"
+                    print(f"[FAIL] {name}: {type(e).__name__}: {e}", flush=True)
+                    traceback.print_exc()
+                    rows.append({"cell": name, "status": "failed",
+                                 "error": f"{type(e).__name__}: {e}"})
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1, default=str)
+        print(f"wrote {args.out}")
+    n_ok = sum(r["status"] == "ok" for r in rows)
+    n_skip = sum(r["status"] == "skipped" for r in rows)
+    print(f"cells: {n_ok} ok, {n_skip} skipped, {failures} FAILED")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

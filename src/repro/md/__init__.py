@@ -1,0 +1,1 @@
+"""Molecular-dynamics substrate: lattices, neighbor lists, integrator, driver."""

@@ -1,0 +1,477 @@
+"""Distributed MD: spatial slab decomposition + halo exchange + migration.
+
+This is the paper's parallelization (Sec. 3.3, 3.5.4) in JAX-native form:
+
+  * 1-D slab decomposition along x over the ``spatial`` mesh axis (the
+    paper's own communication model in Sec. 3.3 is 1-D). Each slab holds a
+    fixed-capacity, mask-padded atom array — static shapes shard and jit.
+  * Halo (ghost) exchange with the +/- x neighbor slabs via
+    ``lax.ppermute`` (periodic ring), capacity-bounded with overflow flags.
+  * Force evaluation computes contributions on ghosts too; ghost forces are
+    sent BACK to their owner slab (the transpose exchange) and accumulated —
+    the LAMMPS "reverse communication" pattern, hand-written rather than
+    autodiffed through collectives.
+  * The ``model`` mesh axis decomposes the NEIGHBOR dimension of the DP
+    descriptor: each model shard evaluates the embedding of a slice of every
+    atom's neighbor list; the 4 x M T-matrices are ``psum``-reduced. This is
+    the MD analogue of tensor parallelism — the embedding net (95% of FLOPs)
+    splits 16-way without touching the spatial layout.
+  * Atom migration between slabs (atoms crossing the boundary) runs at
+    neighbor-rebuild cadence with capacity-bounded ppermute sends; overflow
+    is reported, never silently dropped.
+
+"One MPI per NUMA domain, one TF graph per rank" becomes "one SPMD program
+per chip": granularity taken to its limit (DESIGN.md Sec. 3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import dp_model
+from repro.core.types import DPConfig
+from repro.md import integrator
+
+
+@dataclasses.dataclass(frozen=True)
+class DomainSpec:
+    box: Tuple[float, float, float]      # global orthorhombic box (A)
+    n_slabs: int                          # spatial axis size
+    atom_capacity: int                    # max owned atoms per slab
+    halo_capacity: int                    # max ghost atoms per side
+    rcut_halo: float                      # rcut + skin
+
+    @property
+    def slab_width(self) -> float:
+        return self.box[0] / self.n_slabs
+
+    def validate(self) -> None:
+        assert self.slab_width >= self.rcut_halo, (
+            f"slab width {self.slab_width:.2f} < halo cutoff "
+            f"{self.rcut_halo:.2f}: 1-D decomposition needs >= 1 slab per "
+            f"cutoff (use fewer slabs)")
+        assert self.n_slabs >= 2, (
+            "slab decomposition assumes >= 2 slabs (ghost images must not "
+            "alias their owners); use md/driver.py for single-domain runs")
+
+
+class SlabState(NamedTuple):
+    """Per-slab padded state; leading dim = n_slabs when global."""
+    pos: jax.Array        # (cap, 3)
+    vel: jax.Array        # (cap, 3)
+    typ: jax.Array        # (cap,) int32
+    mask: jax.Array       # (cap,) bool — owned-atom validity
+
+
+def partition_atoms(pos: np.ndarray, vel: np.ndarray, typ: np.ndarray,
+                    spec: DomainSpec) -> Tuple[SlabState, int]:
+    """Host-side initial partition -> stacked (n_slabs, cap, ...) arrays."""
+    slab_of = np.minimum((pos[:, 0] / spec.slab_width).astype(np.int64),
+                         spec.n_slabs - 1)
+    cap = spec.atom_capacity
+    out_pos = np.zeros((spec.n_slabs, cap, 3), np.float32)
+    out_vel = np.zeros((spec.n_slabs, cap, 3), np.float32)
+    out_typ = np.zeros((spec.n_slabs, cap), np.int32)
+    out_mask = np.zeros((spec.n_slabs, cap), bool)
+    overflow = 0
+    for s in range(spec.n_slabs):
+        idx = np.nonzero(slab_of == s)[0]
+        n = len(idx)
+        overflow = max(overflow, n - cap)
+        idx = idx[:cap]
+        out_pos[s, :len(idx)] = pos[idx]
+        out_vel[s, :len(idx)] = vel[idx]
+        out_typ[s, :len(idx)] = typ[idx]
+        out_mask[s, :len(idx)] = True
+    return SlabState(pos=jnp.asarray(out_pos), vel=jnp.asarray(out_vel),
+                     typ=jnp.asarray(out_typ), mask=jnp.asarray(out_mask)), overflow
+
+
+def pad_sel_for(cfg: DPConfig, n_shards: int) -> DPConfig:
+    """Pad each neighbor-type section to a model-axis-divisible size."""
+    sel = tuple(-(-s // n_shards) * n_shards for s in cfg.sel)
+    return dataclasses.replace(cfg, sel=sel)
+
+
+# --------------------------------------------------------------- halo pieces
+
+def _pack_boundary(pos, typ, mask, lo_side: bool, spec: DomainSpec,
+                   slab_lo: jax.Array):
+    """Select owned atoms within rcut of a slab face into a fixed buffer."""
+    x_rel = pos[:, 0] - slab_lo
+    if lo_side:
+        sel = mask & (x_rel < spec.rcut_halo)
+    else:
+        sel = mask & (x_rel > spec.slab_width - spec.rcut_halo)
+    # stable-compact selected atoms to the buffer front
+    order = jnp.argsort(jnp.where(sel, 0, 1), stable=True)
+    hc = spec.halo_capacity
+    idx = order[:hc]
+    valid = sel[idx]
+    overflow = jnp.sum(sel) - jnp.sum(valid)
+    buf_pos = jnp.where(valid[:, None], pos[idx], 0.0)
+    buf_typ = jnp.where(valid, typ[idx], 0)
+    return buf_pos, buf_typ, valid, idx, overflow
+
+
+def _halo_exchange(pos, typ, mask, spec: DomainSpec, slab_lo, axis: str):
+    """Ghost atoms from both x-neighbor slabs (periodic ring).
+
+    Returns (ghost_pos (2*hc, 3) shifted into this slab's frame, ghost_typ,
+    ghost_mask, reverse-comm bookkeeping, overflow).
+    """
+    n = spec.n_slabs
+    right = [(i, (i + 1) % n) for i in range(n)]
+    left = [(i, (i - 1) % n) for i in range(n)]
+
+    # pack my boundary layers
+    lo_pos, lo_typ, lo_valid, lo_idx, ovf_l = _pack_boundary(
+        pos, typ, mask, True, spec, slab_lo)
+    hi_pos, hi_typ, hi_valid, hi_idx, ovf_r = _pack_boundary(
+        pos, typ, mask, False, spec, slab_lo)
+
+    # my low boundary -> left neighbor's ghost; high -> right neighbor
+    from_right = jax.tree.map(lambda t: jax.lax.ppermute(t, axis, left),
+                              (lo_pos, lo_typ, lo_valid))
+    from_left = jax.tree.map(lambda t: jax.lax.ppermute(t, axis, right),
+                             (hi_pos, hi_typ, hi_valid))
+
+    # shift ghosts into this slab's coordinate frame (periodic in x)
+    box_x = spec.box[0]
+    idx_s = jax.lax.axis_index(axis)
+    fl_pos, fl_typ, fl_valid = from_left
+    fr_pos, fr_typ, fr_valid = from_right
+    fl_shift = jnp.where(idx_s == 0, -box_x, 0.0)       # wrap from slab n-1
+    fr_shift = jnp.where(idx_s == n - 1, box_x, 0.0)    # wrap from slab 0
+    fl_pos = fl_pos.at[:, 0].add(fl_shift)
+    fr_pos = fr_pos.at[:, 0].add(fr_shift)
+
+    ghost_pos = jnp.concatenate([fl_pos, fr_pos], axis=0)
+    ghost_typ = jnp.concatenate([fl_typ, fr_typ], axis=0)
+    ghost_mask = jnp.concatenate([fl_valid, fr_valid], axis=0)
+    book = {"lo_idx": lo_idx, "lo_valid": lo_valid,
+            "hi_idx": hi_idx, "hi_valid": hi_valid}
+    return ghost_pos, ghost_typ, ghost_mask, book, jnp.maximum(ovf_l, ovf_r)
+
+
+def _reverse_force_comm(ghost_force, book, axis: str, n: int, cap: int):
+    """Send ghost-atom force contributions back to their owner slabs.
+
+    Slot order is preserved end-to-end: my hi-boundary pack became the right
+    neighbor's from_left ghost buffer, so the returned buffer indexes
+    straight back through hi_idx (and symmetrically for lo).
+    """
+    hc = ghost_force.shape[0] // 2
+    f_from_left = ghost_force[:hc]      # ghosts owned by my LEFT neighbor
+    f_from_right = ghost_force[hc:]     # ghosts owned by my RIGHT neighbor
+    right = [(i, (i + 1) % n) for i in range(n)]
+    left = [(i, (i - 1) % n) for i in range(n)]
+    # ppermute(x, [(i, j)]) delivers x_i to j: send owner-ward.
+    recv_hi = jax.lax.ppermute(f_from_left, axis, left)    # forces for MY hi
+    recv_lo = jax.lax.ppermute(f_from_right, axis, right)  # forces for MY lo
+    f_local = jnp.zeros((cap, 3), ghost_force.dtype)
+    f_local = f_local.at[book["hi_idx"]].add(
+        recv_hi * book["hi_valid"][:, None])
+    f_local = f_local.at[book["lo_idx"]].add(
+        recv_lo * book["lo_valid"][:, None])
+    return f_local
+
+
+# ------------------------------------------------------- neighbor list (slab)
+
+def _slab_neighbors(pos_all, typ_all, mask_all, cfg: DPConfig, rc2: float,
+                    n_local: int, box):
+    """Brute-force type-sectioned neighbor list for local atoms vs all atoms.
+
+    O(cap * (cap + 2hc)) — the slab-local cost; cell lists drop in here for
+    production sizes (the dry-run path uses this exact function with
+    ShapeDtypeStructs, so the compile proof covers it). y/z periodicity via
+    min-image (x is ghost-resolved; min-image no-ops there for box > 2 rc).
+    """
+    rij = pos_all[None, :, :] - pos_all[:n_local, None, :]
+    rij = rij - box * jnp.round(rij / box)
+    d2 = jnp.sum(rij * rij, axis=-1)
+    n_all = pos_all.shape[0]
+    cand = jnp.broadcast_to(jnp.arange(n_all, dtype=jnp.int32)[None, :],
+                            (n_local, n_all))
+    self_mask = cand == jnp.arange(n_local, dtype=jnp.int32)[:, None]
+    valid = (~self_mask) & mask_all[None, :] & mask_all[:n_local, None] \
+        & (d2 < rc2)
+    sections = []
+    overflow = jnp.zeros((), jnp.int32)
+    for t, cap_t in enumerate(cfg.sel):
+        vt = valid & (typ_all[cand.clip(0)] == t)
+        order = jnp.argsort(jnp.where(vt, 0, 1), axis=1, stable=True)
+        packed = jnp.take_along_axis(cand, order, axis=1)
+        pvalid = jnp.take_along_axis(vt, order, axis=1)
+        if packed.shape[1] < cap_t:
+            packed = jnp.pad(packed, ((0, 0), (0, cap_t - packed.shape[1])),
+                             constant_values=-1)
+            pvalid = jnp.pad(pvalid, ((0, 0), (0, cap_t - pvalid.shape[1])))
+        sections.append(jnp.where(pvalid[:, :cap_t], packed[:, :cap_t], -1))
+        overflow = jnp.maximum(overflow, jnp.max(jnp.sum(vt, 1)) - cap_t)
+    return jnp.concatenate(sections, axis=1), overflow
+
+
+# ---------------------------------------------------------------- the MD step
+
+def make_distributed_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
+                             masses: Tuple[float, ...], dt_fs: float,
+                             impl: Optional[str] = None,
+                             spatial_axis="data",
+                             model_axis: str = "model",
+                             decomp: str = "slots",
+                             neighbor: str = "brute"):
+    """Build the shard_map'd (params, SlabState) -> (SlabState, thermo) step.
+
+    The returned function expects SlabState leaves stacked over slabs and
+    sharded P(spatial_axis) on dim 0; params replicated.
+
+    decomp:
+      "slots" — model shards take complementary NEIGHBOR-SLOT slices of every
+                atom; partial T matrices psum-reduce (validated vs the
+                single-process reference to 1e-10).
+      "atoms" — model shards take complementary ATOM slices of the slab
+                (search + embedding + fitting end-to-end); per-shard forces
+                psum-reduce. Better balanced at production sizes and keeps
+                the neighbor search per-chip — the multi-pod MD dry-run path.
+    neighbor: "brute" O(N^2) (tests) | "cells" O(N) slab cell list.
+    """
+    spec.validate()
+    n_model = mesh.shape[model_axis]
+    if isinstance(spatial_axis, str):
+        n_spatial = mesh.shape[spatial_axis]
+    else:
+        n_spatial = 1
+        for a in spatial_axis:
+            n_spatial *= mesh.shape[a]
+    assert n_spatial == spec.n_slabs, (n_spatial, spec.n_slabs)
+    cfg_p = pad_sel_for(cfg, n_model)
+    # per-shard slice config: each model shard sees 1/n_model of each section
+    cfg_local = dataclasses.replace(
+        cfg_p, sel=tuple(s // n_model for s in cfg_p.sel))
+    rc2 = float(spec.rcut_halo) ** 2
+    mass_table = jnp.asarray(masses, jnp.float32)
+    # min-image applies to y/z only: x periodicity is ghost-resolved, and a
+    # full-box x-wrap would alias ghost images back onto local atoms when
+    # box_x/2 < rcut + slab_width (1-2 slab configurations).
+    box = jnp.asarray([1e30, spec.box[1], spec.box[2]], jnp.float32)
+    assert spec.atom_capacity % n_model == 0 or decomp == "slots"
+    atom_slice = spec.atom_capacity // n_model
+    n_centers = atom_slice if decomp == "atoms" else spec.atom_capacity
+    nbr_fn = None
+    if neighbor == "cells":
+        from repro.md import slab_cells
+        nbr_fn = slab_cells.make_slab_neighbor_fn(
+            cfg_p, spec.box, spec.slab_width, spec.rcut_halo, n_centers)
+
+    def slot_energy(pos_all, nlist_slice, typ_all, mask_local, params):
+        """Sum of local-atom energies from a neighbor-slot SLICE; psum over
+        the model axis completes the T matrices (neighbor decomposition)."""
+        n_local = mask_local.shape[0]
+        nmask = nlist_slice >= 0
+        j = jnp.maximum(nlist_slice, 0)
+        rij = pos_all[j] - pos_all[:n_local, None, :]
+        rij = rij - box * jnp.round(rij / box)
+        rij = jnp.where(nmask[..., None], rij, 0.0)
+        e_i = dp_model.dp_atomic_energy(
+            params, cfg_local, rij, nmask, typ_all[:n_local], impl=impl,
+            axis_name=model_axis, nsel_norm=cfg_p.nsel)
+        return jnp.sum(e_i * mask_local)
+
+    def atoms_energy(pos_all, nlist, typ_centers, mask_centers, start, params):
+        """Sum of energies for an ATOM slice (full neighbor lists)."""
+        nmask = nlist >= 0
+        j = jnp.maximum(nlist, 0)
+        centers = jax.lax.dynamic_slice_in_dim(pos_all, start, n_centers, 0)
+        rij = pos_all[j] - centers[:, None, :]
+        rij = rij - box * jnp.round(rij / box)
+        rij = jnp.where(nmask[..., None], rij, 0.0)
+        e_i = dp_model.dp_atomic_energy(
+            params, cfg_p, rij, nmask, typ_centers, impl=impl)
+        return jnp.sum(e_i * mask_centers)
+
+    def step(params, state: SlabState):
+        # shard_map keeps the sharded slab dim at local size 1 — squeeze it.
+        pos, vel, typ, mask = (x[0] for x in state)
+        cap = pos.shape[0]
+        idx_s = jax.lax.axis_index(spatial_axis)
+        slab_lo = idx_s.astype(jnp.float32) * spec.slab_width
+
+        # -- halo exchange ------------------------------------------------
+        ghost_pos, ghost_typ, ghost_mask, book, h_ovf = _halo_exchange(
+            pos, typ, mask, spec, slab_lo, spatial_axis)
+        pos_all = jnp.concatenate([pos, ghost_pos], axis=0)
+        typ_all = jnp.concatenate([typ, ghost_typ], axis=0)
+        mask_all = jnp.concatenate([mask, ghost_mask], axis=0)
+
+        if decomp == "atoms":
+            # -- model axis slices ATOMS: search + energy + grad per slice --
+            start = jax.lax.axis_index(model_axis).astype(jnp.int32) * atom_slice
+            if nbr_fn is not None:
+                nlist, n_ovf = nbr_fn(pos_all, typ_all, mask_all, slab_lo,
+                                      start)
+            else:
+                nlist_full, n_ovf = _slab_neighbors(
+                    pos_all, typ_all, mask_all, cfg_p, rc2, cap, box)
+                nlist = jax.lax.dynamic_slice_in_dim(
+                    nlist_full, start, n_centers, 0)
+            typ_c = jax.lax.dynamic_slice_in_dim(typ, start, n_centers, 0)
+            mask_c = jax.lax.dynamic_slice_in_dim(mask, start, n_centers, 0)
+
+            def e_fn(p_all):
+                return atoms_energy(p_all, nlist, typ_c, mask_c, start, params)
+
+            e_slice, de_dpos = jax.value_and_grad(e_fn)(pos_all)
+            # disjoint atom slices: plain psums assemble globals
+            e_local = jax.lax.psum(e_slice, model_axis)
+            force_all = -jax.lax.psum(de_dpos, model_axis)
+            force = force_all[:cap] + _reverse_force_comm(
+                force_all[cap:], book, spatial_axis, spec.n_slabs, cap)
+        else:
+            # -- model axis slices neighbor SLOTS (psum'd T matrices) -------
+            if nbr_fn is not None:
+                nlist, n_ovf = nbr_fn(pos_all, typ_all, mask_all, slab_lo, 0)
+            else:
+                nlist, n_ovf = _slab_neighbors(pos_all, typ_all, mask_all,
+                                               cfg_p, rc2, cap, box)
+            parts = []
+            for (a, b) in cfg_p.sel_sections():
+                w = (b - a) // n_model
+                parts.append(jax.lax.dynamic_slice_in_dim(
+                    nlist, a + jax.lax.axis_index(model_axis) * w, w, axis=1))
+            nlist_slice = jnp.concatenate(parts, axis=1)
+
+            # Grad target is e / n_model: the psum-of-T transpose sums the
+            # identical cotangents of all model shards (measured n_model x
+            # overcount otherwise); dividing restores per-slice exactness.
+            def e_fn(p_all):
+                return slot_energy(p_all, nlist_slice, typ_all, mask,
+                                   params) / n_model
+
+            e_frac, de_dpos = jax.value_and_grad(e_fn)(pos_all)
+            e_local = e_frac * n_model
+            force_all = -de_dpos          # includes ghost contributions
+            force = force_all[:cap] + _reverse_force_comm(
+                force_all[cap:], book, spatial_axis, spec.n_slabs, cap)
+            # model axis holds complementary neighbor slices: reduce forces.
+            force = jax.lax.psum(force, model_axis)
+
+        # -- velocity Verlet (kick-drift-kick with fresh forces) ------------
+        m = mass_table[typ][:, None]
+        vel = vel + 0.5 * dt_fs * integrator.FORCE_TO_ACC * force / m
+        pos = pos + dt_fs * vel
+        vel = vel + 0.5 * dt_fs * integrator.FORCE_TO_ACC * force / m
+        # keep x within the global box (y, z wrap via min-image in rij)
+        pos = jnp.where(mask[:, None], pos, 0.0)
+
+        ke = 0.5 * jnp.sum(mass_table[typ] * mask * jnp.sum(vel * vel, -1)) \
+            / integrator.FORCE_TO_ACC
+        thermo = {
+            "pe": jax.lax.psum(e_local, spatial_axis),
+            "ke": jax.lax.psum(ke, spatial_axis),
+            "n_atoms": jax.lax.psum(jnp.sum(mask), spatial_axis),
+            "halo_overflow": jax.lax.pmax(h_ovf, spatial_axis),
+            "nbr_overflow": jax.lax.pmax(n_ovf, spatial_axis),
+        }
+        new_state = SlabState(pos=pos[None], vel=vel[None], typ=typ[None],
+                              mask=mask[None])
+        return new_state, thermo
+
+    state_spec = SlabState(pos=P(spatial_axis), vel=P(spatial_axis),
+                           typ=P(spatial_axis), mask=P(spatial_axis))
+    thermo_spec = {"pe": P(), "ke": P(), "n_atoms": P(),
+                   "halo_overflow": P(), "nbr_overflow": P()}
+    return shard_map(step, mesh=mesh, in_specs=(P(), state_spec),
+                     out_specs=(state_spec, thermo_spec),
+                     check_vma=False)
+
+
+# ------------------------------------------------------------------ migration
+
+def make_migration_step(spec: DomainSpec, mesh: Mesh,
+                        spatial_axis: str = "data"):
+    """Move atoms that crossed a slab boundary to the neighbor slab.
+
+    Runs at neighbor-rebuild cadence. Capacity-bounded ppermute sends with
+    overflow flags; periodic wrap in x is applied to the migrated copies.
+    """
+    n = spec.n_slabs
+    box_x = spec.box[0]
+
+    def migrate(state: SlabState):
+        pos, vel, typ, mask = (x[0] for x in state)
+        cap = pos.shape[0]
+        hc = spec.halo_capacity
+        idx_s = jax.lax.axis_index(spatial_axis)
+        slab_lo = idx_s.astype(jnp.float32) * spec.slab_width
+        x = pos[:, 0] - slab_lo
+        go_left = mask & (x < 0)
+        go_right = mask & (x >= spec.slab_width)
+        stay = mask & ~go_left & ~go_right
+
+        def pack(sel):
+            order = jnp.argsort(jnp.where(sel, 0, 1), stable=True)
+            idx = order[:hc]
+            valid = sel[idx]
+            ovf = jnp.sum(sel) - jnp.sum(valid)
+            return (jnp.where(valid[:, None], pos[idx], 0.0),
+                    jnp.where(valid[:, None], vel[idx], 0.0),
+                    jnp.where(valid, typ[idx], 0), valid, ovf)
+
+        lp, lv, lt, lval, l_ovf = pack(go_left)
+        rp, rv, rt, rval, r_ovf = pack(go_right)
+        rightp = [(i, (i + 1) % n) for i in range(n)]
+        leftp = [(i, (i - 1) % n) for i in range(n)]
+        in_l = jax.tree.map(lambda t: jax.lax.ppermute(t, spatial_axis, rightp),
+                            (rp, rv, rt, rval))     # from left slab
+        in_r = jax.tree.map(lambda t: jax.lax.ppermute(t, spatial_axis, leftp),
+                            (lp, lv, lt, lval))     # from right slab
+        # periodic wrap for migrants crossing the box ends:
+        # from slab n-1 arriving at slab 0: x ~ box_x -> x - box_x;
+        # from slab 0 arriving at slab n-1: x < 0 -> x + box_x.
+        ilp, ilv, ilt, ilval = in_l
+        irp, irv, irt, irval = in_r
+        ilp = ilp.at[:, 0].set(jnp.where(
+            (idx_s == 0) & ilval & (ilp[:, 0] >= box_x),
+            ilp[:, 0] - box_x, ilp[:, 0]))
+        irp = irp.at[:, 0].set(jnp.where(
+            (idx_s == n - 1) & irval & (irp[:, 0] < 0),
+            irp[:, 0] + box_x, irp[:, 0]))
+
+        # compact stayers, then append arrivals
+        order = jnp.argsort(jnp.where(stay, 0, 1), stable=True)
+        pos_c = pos[order]
+        vel_c = vel[order]
+        typ_c = typ[order]
+        mask_c = stay[order]
+        n_stay = jnp.sum(stay)
+        arr_pos = jnp.concatenate([ilp, irp], 0)
+        arr_vel = jnp.concatenate([ilv, irv], 0)
+        arr_typ = jnp.concatenate([ilt, irt], 0)
+        arr_val = jnp.concatenate([ilval, irval], 0)
+        # place arrival j at slot n_stay + rank(j); invalid/overflow -> cap
+        # (out of range, dropped by mode="drop")
+        rank = jnp.cumsum(arr_val) - 1
+        slot = jnp.where(arr_val, n_stay + rank, cap).astype(jnp.int32)
+        m_ovf = jnp.maximum(jnp.max(jnp.where(arr_val, slot, 0)) - (cap - 1), 0)
+        pos_c = pos_c.at[slot].set(arr_pos, mode="drop")
+        vel_c = vel_c.at[slot].set(arr_vel, mode="drop")
+        typ_c = typ_c.at[slot].set(arr_typ, mode="drop")
+        mask_c = mask_c.at[slot].set(arr_val, mode="drop")
+        ovf = jnp.maximum(jnp.maximum(l_ovf, r_ovf), m_ovf)
+        return SlabState(pos=pos_c[None], vel=vel_c[None], typ=typ_c[None],
+                         mask=mask_c[None]), jax.lax.pmax(ovf, spatial_axis)
+
+    state_spec = SlabState(pos=P(spatial_axis), vel=P(spatial_axis),
+                           typ=P(spatial_axis), mask=P(spatial_axis))
+    return shard_map(migrate, mesh=mesh, in_specs=(state_spec,),
+                     out_specs=(state_spec, P()), check_vma=False)

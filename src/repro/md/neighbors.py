@@ -1,0 +1,145 @@
+"""O(N) cell-list neighbor search with PBC and type-sectioned padded lists.
+
+Output layout matches the descriptor's expectation: for each atom, slots
+[0, sel_0) hold type-0 neighbors, [sel_0, sel_0+sel_1) type-1, ... with -1
+padding — the DeePMD type-sectioned convention that makes per-type embedding
+nets static slices.
+
+All shapes are static (fixed capacities), so the search jits and shards;
+capacity overflow is *reported* (flags), never silently truncated — the
+driver escalates capacities on overflow (the fault-tolerance policy for
+density fluctuations).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class NeighborSpec:
+    rcut_nbr: float              # rcut + skin buffer (paper: +2 A)
+    sel: Tuple[int, ...]         # per-type slot capacities
+    cell_capacity: int = 64      # max atoms per cell-list bin
+
+    @property
+    def nsel(self) -> int:
+        return int(sum(self.sel))
+
+
+def _min_image(rij: jax.Array, box: Optional[jax.Array]) -> jax.Array:
+    if box is None:
+        return rij
+    return rij - box * jnp.round(rij / box)
+
+
+def _pack_sections(
+    cand: jax.Array,      # (N, C) candidate indices (-1 invalid)
+    dist2: jax.Array,     # (N, C) squared distances
+    cand_type: jax.Array, # (N, C)
+    spec: NeighborSpec,
+    rc2: float,
+) -> Tuple[jax.Array, jax.Array]:
+    """Pack candidates into type sections; returns (nlist (N, nsel), overflow)."""
+    n = cand.shape[0]
+    sections = []
+    overflow = jnp.zeros((), jnp.int32)
+    for t, cap_t in enumerate(spec.sel):
+        valid = (cand >= 0) & (dist2 < rc2) & (cand_type == t)
+        # Stable-sort invalids to the back; ties keep candidate order.
+        order = jnp.argsort(jnp.where(valid, 0, 1), axis=1, stable=True)
+        packed = jnp.take_along_axis(cand, order, axis=1)
+        pvalid = jnp.take_along_axis(valid, order, axis=1)
+        if packed.shape[1] < cap_t:   # fewer candidates than capacity: pad
+            pad = cap_t - packed.shape[1]
+            packed = jnp.pad(packed, ((0, 0), (0, pad)), constant_values=-1)
+            pvalid = jnp.pad(pvalid, ((0, 0), (0, pad)))
+        sec = jnp.where(pvalid[:, :cap_t], packed[:, :cap_t], -1)
+        overflow = jnp.maximum(overflow, jnp.max(jnp.sum(valid, axis=1)) - cap_t)
+        sections.append(sec)
+    return jnp.concatenate(sections, axis=1), overflow
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def brute_force_neighbors(
+    pos: jax.Array, atype: jax.Array, spec: NeighborSpec,
+    box: Optional[jax.Array] = None, amask: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """O(N^2) reference / small-box fallback (cells would alias under PBC)."""
+    n = pos.shape[0]
+    rij = _min_image(pos[None, :, :] - pos[:, None, :], box)
+    d2 = jnp.sum(rij * rij, axis=-1)
+    cand = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (n, n))
+    self_mask = jnp.eye(n, dtype=bool)
+    valid = ~self_mask
+    if amask is not None:
+        valid &= (amask > 0)[None, :] & (amask > 0)[:, None]
+    cand = jnp.where(valid, cand, -1)
+    d2 = jnp.where(valid, d2, jnp.inf)
+    ctype = atype[cand.clip(0)]
+    return _pack_sections(cand, d2, ctype, spec, spec.rcut_nbr**2)
+
+
+def make_cell_list_fn(spec: NeighborSpec, box: np.ndarray):
+    """Build a jit'd O(N) neighbor function for a fixed orthorhombic box.
+
+    The box is static: cell counts must be compile-time constants. Falls back
+    to brute force when the box is too small for 3 cells per dimension.
+    """
+    ncell = np.maximum(np.floor(box / spec.rcut_nbr).astype(int), 1)
+    if np.any(ncell < 3):
+        def small_fn(pos, atype, amask=None):
+            return brute_force_neighbors(
+                pos, atype, spec, jnp.asarray(box), amask)
+        return small_fn
+
+    ncells = int(np.prod(ncell))
+    cell_size = box / ncell
+    offsets = np.stack(
+        np.meshgrid(*[[-1, 0, 1]] * 3, indexing="ij"), axis=-1
+    ).reshape(-1, 3)                                   # (27, 3)
+
+    @jax.jit
+    def fn(pos, atype, amask=None):
+        n = pos.shape[0]
+        cap = spec.cell_capacity
+        cidx3 = jnp.clip(
+            (pos / jnp.asarray(cell_size)).astype(jnp.int32),
+            0, jnp.asarray(ncell - 1),
+        )
+        cflat = (cidx3[:, 0] * ncell[1] + cidx3[:, 1]) * ncell[2] + cidx3[:, 2]
+        if amask is not None:
+            cflat = jnp.where(amask > 0, cflat, ncells)   # park invalid atoms
+
+        # Bucket atoms: rank within cell via sorted order.
+        order = jnp.argsort(cflat)
+        sorted_cells = cflat[order]
+        starts = jnp.searchsorted(sorted_cells, jnp.arange(ncells + 1))
+        rank = jnp.arange(n) - starts[sorted_cells]
+        cell_overflow = jnp.max(rank) - (cap - 1)
+        # Out-of-capacity or parked atoms drop (mode="drop").
+        table = jnp.full((ncells + 1, cap), -1, jnp.int32)
+        table = table.at[sorted_cells, rank].set(
+            order.astype(jnp.int32), mode="drop")
+
+        # Candidates: 27 neighbor cells per atom.
+        nbr3 = (cidx3[:, None, :] + jnp.asarray(offsets)[None, :, :]) % jnp.asarray(ncell)
+        nbrflat = (nbr3[..., 0] * ncell[1] + nbr3[..., 1]) * ncell[2] + nbr3[..., 2]
+        cand = table[nbrflat].reshape(n, 27 * cap)
+        self_mask = cand == jnp.arange(n, dtype=jnp.int32)[:, None]
+        cand = jnp.where(self_mask, -1, cand)
+
+        rij = _min_image(pos[cand.clip(0)] - pos[:, None, :], jnp.asarray(box))
+        d2 = jnp.where(cand >= 0, jnp.sum(rij * rij, axis=-1), jnp.inf)
+        ctype = atype[cand.clip(0)]
+        nlist, sec_overflow = _pack_sections(
+            cand, d2, ctype, spec, spec.rcut_nbr**2)
+        return nlist, jnp.maximum(sec_overflow, cell_overflow)
+
+    return fn

@@ -1,0 +1,100 @@
+"""Shared neural-net building blocks for the LM zoo (pure JAX, pytree params)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal_init(key: jax.Array, shape, scale: float, dtype) -> jax.Array:
+    std = scale / max(1.0, float(shape[0]) ** 0.5) if len(shape) >= 2 else scale
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * std).astype(dtype)
+
+
+def dense_init(key: jax.Array, d_in: int, d_out: int, dtype, bias: bool = False) -> Dict[str, jax.Array]:
+    p = {"w": truncated_normal_init(key, (d_in, d_out), 1.0, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Dict[str, jax.Array], x: jax.Array, dtype=None) -> jax.Array:
+    """Linear layer; params are cast to the activation dtype (bf16 compute
+    against f32 master weights) unless ``dtype`` overrides both."""
+    if dtype is not None:
+        x = x.astype(dtype)
+    w = p["w"].astype(x.dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def rms_norm(gamma: jax.Array, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm in f32 accumulation regardless of input dtype."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * scale * gamma.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(p: Dict[str, jax.Array], x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["g"].astype(jnp.float32) + p["b"].astype(jnp.float32)).astype(dt)
+
+
+def swiglu_init(key: jax.Array, d: int, d_ff: int, dtype) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": truncated_normal_init(k1, (d, d_ff), 1.0, dtype),     # gate proj
+        "wg": truncated_normal_init(k2, (d, d_ff), 1.0, dtype),     # up proj
+        "wo": truncated_normal_init(k3, (d_ff, d), 1.0, dtype),
+    }
+
+
+def swiglu(p: Dict[str, Any], x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["wi"].astype(x.dtype)) * (x @ p["wg"].astype(x.dtype))
+    return h @ p["wo"].astype(x.dtype)
+
+
+def gelu_mlp_init(key: jax.Array, d: int, d_ff: int, dtype) -> Dict[str, Any]:
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": truncated_normal_init(k1, (d, d_ff), 1.0, dtype),
+        "bi": jnp.zeros((d_ff,), dtype),
+        "wo": truncated_normal_init(k2, (d_ff, d), 1.0, dtype),
+        "bo": jnp.zeros((d,), dtype),
+    }
+
+
+def gelu_mlp(p: Dict[str, Any], x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(x @ p["wi"].astype(x.dtype) + p["bi"].astype(x.dtype))
+    return h @ p["wo"].astype(x.dtype) + p["bo"].astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                          # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                        # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0.0:
+        return x
+    return cap * jnp.tanh(x / cap)

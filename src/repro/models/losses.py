@@ -1,0 +1,64 @@
+"""Loss functions (f32 accumulation; vocab axis may be model-sharded)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_softmax_cross_entropy(hidden: jax.Array, logits_fn, labels: jax.Array,
+                                  mask: Optional[jax.Array] = None,
+                                  chunk: int = 512) -> jax.Array:
+    """Cross-entropy without materializing full (B, S, V) logits.
+
+    The LM-head matmul + log-softmax run one sequence-chunk at a time under
+    ``jax.checkpoint`` — logits live only at (B, chunk, V) and are recomputed
+    in backward. This is the paper's kernel-fusion principle applied to the
+    loss layer: the big intermediate (logits ~ G_i) never reaches HBM whole.
+
+    hidden: (B, S, d) post-final-norm states; logits_fn: (B, c, d) -> (B, c, V).
+    """
+    b, s, d = hidden.shape
+    if s % chunk != 0 or s == chunk:
+        return softmax_cross_entropy(logits_fn(hidden), labels, mask)
+    n = s // chunk
+    hs = jnp.moveaxis(hidden.reshape(b, n, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, n, chunk), 1, 0)
+    ws = (jnp.ones((b, s), jnp.float32) if mask is None
+          else mask.astype(jnp.float32))
+    ws = jnp.moveaxis(ws.reshape(b, n, chunk), 1, 0)
+
+    @jax.checkpoint
+    def one(args):
+        h, l, w = args
+        logits = logits_fn(h).astype(jnp.float32)
+        m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+        shifted = logits - m
+        lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+        ll = jnp.take_along_axis(shifted, l[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - ll) * w), jnp.sum(w)
+
+    nll, wsum = jax.lax.map(one, (hs, ls, ws))
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(wsum), 1.0)
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token cross-entropy.
+
+    logits: (..., V) any float dtype (log-softmax runs in f32; the reductions
+    over a model-sharded vocab axis lower to all-reduces, never a gather);
+    labels: (...) int32. mask: (...) optional weights.
+    """
+    logits = logits.astype(jnp.float32)
+    m = logits.max(axis=-1, keepdims=True)
+    shifted = logits - jax.lax.stop_gradient(m)
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    label_logit = jnp.take_along_axis(shifted, labels[..., None], axis=-1)[..., 0]
+    nll = lse - label_logit
+    if mask is not None:
+        w = mask.astype(jnp.float32)
+        return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+    return jnp.mean(nll)

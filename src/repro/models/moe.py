@@ -1,0 +1,114 @@
+"""Mixture-of-experts FFN: top-k routing with sort-based capacity dispatch.
+
+Dispatch is the memory-bound step (the MoE analogue of the paper's G_i):
+instead of a (S, E, C) one-hot dispatch einsum we sort token-expert
+assignments and scatter into per-expert capacity buffers — O(S*k*d) moved
+bytes, not O(S*E*C). The buffers' expert axis shards over the `model` mesh
+axis (expert parallelism); experts are padded to a mesh-divisible count
+(padded experts receive -inf router logits, hence zero tokens).
+
+vmapped over the batch axis, so the sort stays local to a sequence and the
+token axis's `data` sharding never forces a cross-device sort.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.lm_types import LMConfig
+
+
+def padded_experts(cfg: LMConfig, multiple: int = 16) -> int:
+    e = cfg.moe.n_experts
+    return -(-e // multiple) * multiple
+
+
+def capacity(cfg: LMConfig, seq: int) -> int:
+    m = cfg.moe
+    c = int(seq * m.top_k / m.n_experts * m.capacity_factor)
+    return max(8, -(-c // 8) * 8)
+
+
+def init_moe_params(key: jax.Array, cfg: LMConfig, dtype) -> Dict[str, Any]:
+    m = cfg.moe
+    d = cfg.d_model
+    e_pad = padded_experts(cfg)
+    kr, ki, kg, ko, ks, ksg = jax.random.split(key, 6)
+    p = {
+        "router": common.truncated_normal_init(kr, (d, m.n_experts), 1.0, jnp.float32),
+        # expert FFN weights (SwiGLU), stacked on a padded expert axis
+        "wi": common.truncated_normal_init(ki, (e_pad, d, m.d_expert), 1.0, dtype),
+        "wg": common.truncated_normal_init(kg, (e_pad, d, m.d_expert), 1.0, dtype),
+        "wo": common.truncated_normal_init(ko, (e_pad, m.d_expert, d), 1.0, dtype),
+    }
+    if m.n_shared > 0:
+        p["shared"] = common.swiglu_init(ks, d, m.n_shared * m.d_shared, dtype)
+        p["shared_gate"] = common.truncated_normal_init(ksg, (d, 1), 1.0, jnp.float32)
+    return p
+
+
+def _dispatch_one(xs: jax.Array, gates: jax.Array, ids: jax.Array,
+                  e_pad: int, cap: int) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Sort-based dispatch for one sequence.
+
+    xs: (S, d); gates/ids: (S, k). Returns (buf (E,C,d), se, rank, keep) where
+    se/rank/keep are (S*k,) flattened-and-sorted routing metadata.
+    """
+    s, k = ids.shape
+    t = s * k
+    e_flat = ids.reshape(-1)
+    tok = jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)
+    order = jnp.argsort(e_flat, stable=True)
+    se = e_flat[order]
+    tok_s = tok[order]
+    starts = jnp.searchsorted(se, jnp.arange(e_pad, dtype=se.dtype))
+    rank = jnp.arange(t, dtype=jnp.int32) - starts[se].astype(jnp.int32)
+    keep = rank < cap
+    buf = jnp.zeros((e_pad, cap, xs.shape[-1]), xs.dtype)
+    src = xs[tok_s] * keep[:, None].astype(xs.dtype)
+    buf = buf.at[se, jnp.where(keep, rank, cap)].set(src, mode="drop")
+    return buf, se, rank, (order, tok_s, keep)
+
+
+def moe_ffn(p: Dict[str, Any], cfg: LMConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss ()).
+
+    Router in f32; Switch-style load-balance aux loss over real experts.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    e_pad = padded_experts(cfg)
+    cap = capacity(cfg, s)
+
+    logits = (x.astype(jnp.float32) @ p["router"])          # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, m.top_k)              # (B, S, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux: E * mean_e(frac_tokens_e * mean_prob_e)
+    one_hot = jax.nn.one_hot(ids, m.n_experts, dtype=jnp.float32).sum(-2)  # (B,S,E)
+    frac = one_hot.mean((0, 1)) / m.top_k
+    aux = m.n_experts * jnp.sum(frac * probs.mean((0, 1)))
+
+    def per_seq(xs, gs, es):
+        buf, se, rank, (order, tok_s, keep) = _dispatch_one(xs, gs, es, e_pad, cap)
+        h = jnp.einsum("ecd,edf->ecf", buf, p["wi"].astype(buf.dtype))
+        g = jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(buf.dtype))
+        act = jax.nn.silu(h) * g
+        out_buf = jnp.einsum("ecf,efd->ecd", act, p["wo"].astype(buf.dtype))
+        contrib = out_buf[se, jnp.where(keep, rank, 0)]
+        w = (gs.reshape(-1)[order] * keep).astype(xs.dtype)
+        out = jnp.zeros_like(xs).at[tok_s].add(contrib * w[:, None])
+        return out
+
+    out = jax.vmap(per_seq)(x, gates, ids)
+
+    if m.n_shared > 0:
+        sg = jax.nn.sigmoid(x.astype(jnp.float32) @ p["shared_gate"]).astype(x.dtype)
+        out = out + sg * common.swiglu(p["shared"], x)
+    return out, aux.astype(jnp.float32)

@@ -1,0 +1,196 @@
+"""Decoder-only GQA transformer (dense + MoE families).
+
+Covers glm4-9b, qwen2-72b, qwen3-1.7b, granite-3-8b, llava-next-34b
+(backbone; vision frontend stubbed — embeddings arrive precomputed), and the
+MoE variants granite-moe-1b-a400m / qwen2-moe-a2.7b.
+
+Parameters are stacked over layers; the forward pass is a ``lax.scan`` with
+optional remat, so compile time and HLO size are O(1) in depth — a
+requirement for lowering 80-layer models in the dry-run.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import common, moe
+from repro.models.lm_types import LMConfig
+from repro.sharding.ctx import constrain
+
+
+def _compute_dtype(cfg: LMConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _param_dtype(cfg: LMConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def init_block_params(key: jax.Array, cfg: LMConfig) -> Dict[str, Any]:
+    dt = _param_dtype(cfg)
+    ka, kf = jax.random.split(key)
+    p = {
+        "attn_norm": jnp.ones((cfg.d_model,), dt),
+        "attn": attn.init_attn_params(ka, cfg, dt),
+        "ffn_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if cfg.family == "moe":
+        p["ffn"] = moe.init_moe_params(kf, cfg, dt)
+    else:
+        p["ffn"] = common.swiglu_init(kf, cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def init_params(key: jax.Array, cfg: LMConfig) -> Dict[str, Any]:
+    cfg.validate()
+    dt = _param_dtype(cfg)
+    ke, kb, kh, kn = jax.random.split(key, 4)
+    block_keys = jax.random.split(kb, cfg.n_layers)
+    blocks = jax.vmap(lambda k: init_block_params(k, cfg))(block_keys)
+    p = {
+        "embed": common.truncated_normal_init(ke, (cfg.vocab, cfg.d_model), 1.0, dt),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = common.truncated_normal_init(kh, (cfg.d_model, cfg.vocab), 1.0, dt)
+    return p
+
+
+def block_apply(cfg: LMConfig, p: Dict[str, Any], x: jax.Array,
+                positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One transformer block (training / prefill). Returns (x, moe_aux)."""
+    h = common.rms_norm(p["attn_norm"], x, cfg.rms_eps)
+    q, k, v = attn.qkv_project(p["attn"], cfg, h, positions)
+    o = attn.attention(q, k, v, causal=True, softcap_val=cfg.attn_logit_softcap)
+    x = x + common.dense(p["attn"]["wo"], o)
+    x = constrain(x, "batch", "seq", None)
+
+    h = common.rms_norm(p["ffn_norm"], x, cfg.rms_eps)
+    if cfg.family == "moe":
+        f, aux = moe.moe_ffn(p["ffn"], cfg, h)
+    else:
+        f, aux = common.swiglu(p["ffn"], h), jnp.zeros((), jnp.float32)
+    return constrain(x + f, "batch", "seq", None), aux
+
+
+def logits_fn(params: Dict[str, Any], cfg: LMConfig):
+    """(..., d) hidden -> (..., V) logits closure (tied or untied head)."""
+    dt = _compute_dtype(cfg)
+    head = params.get("lm_head", None)
+
+    def f(h):
+        w = (params["embed"].T if head is None else head).astype(dt)
+        return constrain(h @ w, "batch", None, "vocab")
+
+    return f
+
+
+def forward(params: Dict[str, Any], cfg: LMConfig, tokens: Optional[jax.Array] = None,
+            embeds: Optional[jax.Array] = None,
+            return_hidden: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (logits (B, S, V), moe_aux ()).
+
+    Exactly one of ``tokens`` (B, S) int32 / ``embeds`` (B, S, d) must be
+    given; ``embeds`` is the stub-frontend path (llava patch embeddings).
+    With ``return_hidden`` the post-final-norm states (B, S, d) are returned
+    instead of logits (chunked-loss path).
+    """
+    dt = _compute_dtype(cfg)
+    if embeds is None:
+        x = params["embed"][tokens].astype(dt)
+    else:
+        x = embeds.astype(dt)
+    x = constrain(x, "batch", "seq", None)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(carry, p_block):
+        x, aux = carry
+        x, a = block_apply(cfg, p_block, x, positions)
+        return (x, aux + a), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+
+    x = common.rms_norm(params["final_norm"], x, cfg.rms_eps)
+    if return_hidden:
+        return x, aux
+    return logits_fn(params, cfg)(x), aux
+
+
+def prefill(params: Dict[str, Any], cfg: LMConfig, tokens: jax.Array,
+            max_len: int) -> Tuple[jax.Array, attn.KVCache]:
+    """Prefill pass: populate a KV cache of capacity ``max_len``.
+
+    Returns (last-position logits (B, V), cache).
+    """
+    dt = _compute_dtype(cfg)
+    b, s = tokens.shape
+    x = constrain(params["embed"][tokens].astype(dt), "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    cache = attn.init_kv_cache(cfg, cfg.n_layers, b, max_len, dt)
+
+    def body(x, p_block):
+        h = common.rms_norm(p_block["attn_norm"], x, cfg.rms_eps)
+        q, k, v = attn.qkv_project(p_block["attn"], cfg, h, positions)
+        o = attn.attention(q, k, v, causal=True, softcap_val=cfg.attn_logit_softcap)
+        x = x + common.dense(p_block["attn"]["wo"], o)
+        h = common.rms_norm(p_block["ffn_norm"], x, cfg.rms_eps)
+        if cfg.family == "moe":
+            f, _ = moe.moe_ffn(p_block["ffn"], cfg, h)
+        else:
+            f = common.swiglu(p_block["ffn"], h)
+        if max_len > s:   # grow-room: pad statically (never a scatter)
+            pad = ((0, 0), (0, max_len - s), (0, 0), (0, 0))
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        k_pad = constrain(k, "batch", "seq", None, None)
+        v_pad = constrain(v, "batch", "seq", None, None)
+        return constrain(x + f, "batch", "seq", None), (k_pad, v_pad)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, (ks, vs) = jax.lax.scan(body, x, params["blocks"])
+    x = common.rms_norm(params["final_norm"], x[:, -1:], cfg.rms_eps)
+    head = params.get("lm_head", None)
+    w = (params["embed"].T if head is None else head).astype(dt)
+    logits = (x @ w)[:, 0]
+    return logits, attn.KVCache(k=ks, v=vs, length=jnp.asarray(s, jnp.int32))
+
+
+def decode_step(params: Dict[str, Any], cfg: LMConfig, tokens: jax.Array,
+                cache: attn.KVCache) -> Tuple[jax.Array, attn.KVCache]:
+    """One decode step. tokens: (B, 1) int32. Returns (logits (B, V), cache')."""
+    dt = _compute_dtype(cfg)
+    b = tokens.shape[0]
+    x = constrain(params["embed"][tokens].astype(dt), "batch", None, None)
+    pos = jnp.broadcast_to(cache.length, (b, 1))
+
+    def body(x, scanned):
+        p_block, k_cache, v_cache = scanned
+        h = common.rms_norm(p_block["attn_norm"], x, cfg.rms_eps)
+        q, k, v = attn.qkv_project(p_block["attn"], cfg, h, pos)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, cache.length, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, cache.length, axis=1)
+        o = attn.decode_attention(q, k_cache, v_cache, cache.length + 1,
+                                  softcap_val=cfg.attn_logit_softcap)
+        x = x + common.dense(p_block["attn"]["wo"], o)
+        h = common.rms_norm(p_block["ffn_norm"], x, cfg.rms_eps)
+        if cfg.family == "moe":
+            f, _ = moe.moe_ffn(p_block["ffn"], cfg, h)
+        else:
+            f = common.swiglu(p_block["ffn"], h)
+        return x + f, (k_cache, v_cache)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], cache.k, cache.v))
+    x = common.rms_norm(params["final_norm"], x, cfg.rms_eps)
+    head = params.get("lm_head", None)
+    w = (params["embed"].T if head is None else head).astype(dt)
+    logits = (x @ w)[:, 0]
+    return logits, attn.KVCache(k=ks, v=vs, length=cache.length + 1)

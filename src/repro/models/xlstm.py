@@ -1,0 +1,389 @@
+"""xLSTM (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM (scalar memory).
+
+mLSTM runs in the chunkwise-parallel form: within a chunk the recurrence is
+evaluated as a masked attention-like contraction with cumulative log-gate
+decays (all exponents are <= 0 by construction of the running stabilizer),
+across chunks the (dk, dv) matrix state is carried by ``lax.scan``. This is
+O(S * L_c * d) instead of O(S^2 d) — the sub-quadratic property that makes
+xlstm eligible for the long_500k cell.
+
+sLSTM is an inherently sequential scalar-memory recurrence (block-diagonal
+per-head hidden-to-hidden matrices) and is evaluated with ``lax.scan`` over
+time — that is the architecture, not an implementation shortcut.
+
+Layer pattern: cfg.xlstm_pattern cycled over n_layers (default (m,m,m,s)).
+Parameters are stacked over pattern periods and scanned.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.lm_types import LMConfig
+from repro.sharding.ctx import constrain
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- mLSTM cell
+
+def _causal_conv1d(x: jax.Array, w: jax.Array, state: Optional[jax.Array] = None):
+    """Depthwise causal conv. x: (B, S, D); w: (W, D). Returns (y, new_state).
+
+    state: (B, W-1, D) trailing inputs from the previous segment (decode).
+    """
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)               # (B, S+W-1, D)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    new_state = xp[:, -(width - 1):]
+    return y, new_state
+
+
+def init_mlstm_params(key: jax.Array, cfg: LMConfig, dtype) -> Dict[str, Any]:
+    d = cfg.d_model
+    di = 2 * d                     # pf=2 inner width
+    h = cfg.n_heads
+    ks = jax.random.split(key, 9)
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "w_up": common.truncated_normal_init(ks[0], (d, 2 * di), 1.0, dtype),
+        "conv_w": common.truncated_normal_init(ks[1], (cfg.conv_width, di), 1.0, dtype),
+        "w_q": common.truncated_normal_init(ks[2], (di, di), 1.0, dtype),
+        "w_k": common.truncated_normal_init(ks[3], (di, di), 1.0, dtype),
+        "w_v": common.truncated_normal_init(ks[4], (di, di), 1.0, dtype),
+        "w_i": common.truncated_normal_init(ks[5], (di, h), 1.0, dtype),
+        "w_f": common.truncated_normal_init(ks[6], (di, h), 1.0, dtype),
+        "b_i": jnp.zeros((h,), dtype),
+        # forget bias > 0: start remembering (standard LSTM trick)
+        "b_f": jnp.full((h,), 3.0, dtype),
+        "gn": jnp.ones((di,), dtype),
+        "w_down": common.truncated_normal_init(ks[7], (di, d), 1.0, dtype),
+    }
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array        # (B, H, dk, dv) stabilized matrix memory
+    n: jax.Array        # (B, H, dk)
+    m: jax.Array        # (B, H) absolute stabilizer
+    conv: jax.Array     # (B, W-1, di) conv tail
+
+
+def _mlstm_chunk(q, k, v, log_i, log_f, state: Tuple[jax.Array, jax.Array, jax.Array]):
+    """One chunk of the stabilized chunkwise mLSTM recurrence.
+
+    q,k,v: (B, H, L, dh) f32; log_i/log_f: (B, H, L) f32.
+    state: (c (B,H,dk,dv), n (B,H,dk), m (B,H)).
+    Returns (h (B,H,L,dh), new_state).
+    """
+    b_, h_, l_, dh = q.shape
+    c_prev, n_prev, m_prev = state
+    b_cum = jnp.cumsum(log_f, axis=-1)                   # b_i, inclusive
+    a_cum = jax.lax.cummax(log_i - b_cum, axis=2)        # a_i = max_j<=i (g_j - b_j)
+    mloc = jnp.maximum(m_prev[..., None], a_cum)         # (B,H,L)
+
+    # Intra-chunk: D_ij = exp(g_j - b_j - mloc_i) for j<=i.
+    expo = (log_i - b_cum)[..., None, :] - mloc[..., :, None]   # (B,H,L_i,L_j)
+    causal = jnp.tril(jnp.ones((l_, l_), bool))
+    dmat = jnp.where(causal, jnp.exp(expo), 0.0)
+    scores = (q @ jnp.swapaxes(k, -1, -2)) * (dh ** -0.5)
+    sw = scores * dmat
+    h_intra = sw @ v                                     # (B,H,L,dv)
+    qn_intra = jnp.sum(sw, axis=-1)                      # (B,H,L)
+
+    # Inter-chunk: carry-in state contribution.
+    inter_scale = jnp.exp(m_prev[..., None] - mloc)      # (B,H,L)
+    h_inter = (q @ c_prev) * inter_scale[..., None] * (dh ** -0.5)
+    qn_inter = jnp.einsum("bhld,bhd->bhl", q, n_prev) * inter_scale * (dh ** -0.5)
+
+    m_abs = b_cum + mloc                                 # absolute stabilizer
+    denom = jnp.maximum(jnp.abs(qn_intra + qn_inter), jnp.exp(-m_abs))
+    h_out = (h_intra + h_inter) / denom[..., None]
+
+    # State update for the next chunk.
+    btot = b_cum[..., -1]                                # (B,H)
+    mloc_l = mloc[..., -1]
+    kv_scale = jnp.exp(log_i - b_cum - mloc_l[..., None])  # (B,H,L), <= 1
+    c_new = jnp.exp(m_prev - mloc_l)[..., None, None] * c_prev + jnp.einsum(
+        "bhld,bhle,bhl->bhde", k, v, kv_scale)
+    n_new = jnp.exp(m_prev - mloc_l)[..., None] * n_prev + jnp.einsum(
+        "bhld,bhl->bhd", k, kv_scale)
+    m_new = btot + mloc_l
+    return h_out, (c_new, n_new, m_new)
+
+
+def mlstm_sequence(q, k, v, log_i, log_f, state, chunk: int):
+    """Chunkwise scan. q,k,v: (B, H, S, dh); returns (h, final_state)."""
+    b_, h_, s_, dh = q.shape
+    nchunk = s_ // chunk
+    assert nchunk * chunk == s_
+
+    def step(carry, idx):
+        sl = lambda x: jax.lax.dynamic_slice_in_dim(x, idx * chunk, chunk, axis=2)
+        h_out, carry = _mlstm_chunk(sl(q), sl(k), sl(v), sl(log_i), sl(log_f), carry)
+        return carry, h_out
+
+    state, hs = jax.lax.scan(step, state, jnp.arange(nchunk))
+    # hs: (nchunk, B, H, chunk, dh) -> (B, H, S, dh)
+    h = jnp.moveaxis(hs, 0, 2).reshape(b_, h_, s_, dh)
+    return h, state
+
+
+def mlstm_block(p: Dict[str, Any], cfg: LMConfig, x: jax.Array,
+                state: Optional[MLSTMState] = None) -> Tuple[jax.Array, MLSTMState]:
+    """x: (B, S, d). state given => recurrent path (decode)."""
+    b, s, d = x.shape
+    h_heads = cfg.n_heads
+    di = 2 * d
+    dh = di // h_heads
+    xn = common.rms_norm(p["norm"], x, cfg.rms_eps)
+    up = xn @ p["w_up"].astype(xn.dtype)
+    x_in, z = jnp.split(up, 2, axis=-1)                  # (B,S,di) each
+    conv_state = None if state is None else state.conv
+    x_c, conv_new = _causal_conv1d(x_in, p["conv_w"].astype(x_in.dtype), conv_state)
+    x_c = jax.nn.silu(x_c)
+
+    def heads(t):
+        return t.reshape(b, s, h_heads, dh).transpose(0, 2, 1, 3).astype(jnp.float32)
+
+    q = heads(x_c @ p["w_q"].astype(x_c.dtype))
+    k = heads(x_c @ p["w_k"].astype(x_c.dtype))
+    v = heads(x_in @ p["w_v"].astype(x_in.dtype))
+    log_i = (x_c @ p["w_i"].astype(x_c.dtype) + p["b_i"]).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(
+        (x_c @ p["w_f"].astype(x_c.dtype) + p["b_f"]).astype(jnp.float32))
+    log_i = log_i.transpose(0, 2, 1)                     # (B,H,S)
+    log_f = log_f.transpose(0, 2, 1)
+
+    if state is None:
+        c0 = jnp.zeros((b, h_heads, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h_heads, dh), jnp.float32)
+        m0 = jnp.full((b, h_heads), -1e30, jnp.float32)
+        cell = (c0, n0, m0)
+        chunk = min(cfg.xlstm_chunk, s)
+        pad = (-s) % chunk
+        if pad:
+            # pad to a chunk multiple; log_i = -inf on padding makes the
+            # padded steps state-neutral (their kv updates vanish exactly)
+            padq = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            q, k, v = padq(q), padq(k), padq(v)
+            log_i = jnp.pad(log_i, ((0, 0), (0, 0), (0, pad)),
+                            constant_values=-1e30)
+            log_f = jnp.pad(log_f, ((0, 0), (0, 0), (0, pad)))
+        h_out, cell = mlstm_sequence(q, k, v, log_i, log_f, cell, chunk)
+        if pad:
+            h_out = h_out[:, :, :s]
+    else:
+        cell = (state.c, state.n, state.m)
+        h_out, cell = _mlstm_chunk(q, k, v, log_i, log_f, cell)
+
+    h_flat = h_out.transpose(0, 2, 1, 3).reshape(b, s, di).astype(x.dtype)
+    h_flat = common.rms_norm(p["gn"], h_flat, cfg.rms_eps)   # group-norm stand-in
+    out = (h_flat * jax.nn.silu(z)) @ p["w_down"].astype(x.dtype)
+    new_state = MLSTMState(c=cell[0], n=cell[1], m=cell[2], conv=conv_new)
+    return x + out, new_state
+
+
+# ---------------------------------------------------------------- sLSTM cell
+
+def init_slstm_params(key: jax.Array, cfg: LMConfig, dtype) -> Dict[str, Any]:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 8)
+    d_up = int(d * 4 / 3) // 8 * 8
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "w_zifo": common.truncated_normal_init(ks[0], (d, 4 * d), 1.0, dtype),
+        # block-diagonal per-head recurrent matrices, one per gate
+        "r_zifo": common.truncated_normal_init(ks[1], (4, h, dh, dh), 1.0, dtype),
+        "b_zifo": jnp.zeros((4 * d,), dtype),
+        "gn": jnp.ones((d,), dtype),
+        "up1": common.truncated_normal_init(ks[2], (d, d_up), 1.0, dtype),
+        "up2": common.truncated_normal_init(ks[3], (d, d_up), 1.0, dtype),
+        "down": common.truncated_normal_init(ks[4], (d_up, d), 1.0, dtype),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array    # (B, d)
+    n: jax.Array    # (B, d)
+    h: jax.Array    # (B, d)
+    m: jax.Array    # (B, d)
+
+
+def _slstm_step(p, cfg: LMConfig, wx_t: jax.Array, st: SLSTMState) -> Tuple[jax.Array, SLSTMState]:
+    """One timestep. wx_t: (B, 4d) precomputed input projections."""
+    b = wx_t.shape[0]
+    d = cfg.d_model
+    heads = cfg.n_heads
+    dh = d // heads
+    h_prev = st.h.reshape(b, heads, dh)
+    r = p["r_zifo"].astype(jnp.float32)                  # (4, H, dh, dh)
+    rec = jnp.einsum("bhd,ghde->gbhe", h_prev.astype(jnp.float32), r).reshape(4, b, d)
+    pre = wx_t.astype(jnp.float32).reshape(b, 4, d).transpose(1, 0, 2) + rec
+    z = jnp.tanh(pre[0])
+    i_t = pre[1]
+    f_t = pre[2]
+    o = jax.nn.sigmoid(pre[3])
+    m_new = jnp.maximum(f_t + st.m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(f_t + st.m - m_new)
+    c_new = f_p * st.c + i_p * z
+    n_new = f_p * st.n + i_p
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return h_new, SLSTMState(c=c_new, n=n_new, h=h_new, m=m_new)
+
+
+def slstm_block(p: Dict[str, Any], cfg: LMConfig, x: jax.Array,
+                state: Optional[SLSTMState] = None) -> Tuple[jax.Array, SLSTMState]:
+    b, s, d = x.shape
+    xn = common.rms_norm(p["norm"], x, cfg.rms_eps)
+    wx = xn @ p["w_zifo"].astype(xn.dtype) + p["b_zifo"].astype(xn.dtype)  # (B,S,4d)
+    if state is None:
+        state = SLSTMState(
+            c=jnp.zeros((b, d), jnp.float32), n=jnp.zeros((b, d), jnp.float32),
+            h=jnp.zeros((b, d), jnp.float32), m=jnp.full((b, d), -1e30, jnp.float32))
+
+    def step(st, wx_t):
+        h_new, st = _slstm_step(p, cfg, wx_t, st)
+        return st, h_new
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    h_seq = jnp.moveaxis(hs, 0, 1).astype(x.dtype)       # (B,S,d)
+    h_seq = common.rms_norm(p["gn"], h_seq, cfg.rms_eps)
+    up = jax.nn.gelu(h_seq @ p["up1"].astype(x.dtype)) * (h_seq @ p["up2"].astype(x.dtype))
+    out = up @ p["down"].astype(x.dtype)
+    return x + out, state
+
+
+# ------------------------------------------------------------- full LM model
+
+def init_params(key: jax.Array, cfg: LMConfig) -> Dict[str, Any]:
+    cfg.validate()
+    dt = jnp.dtype(cfg.param_dtype)
+    kinds = cfg.layer_kinds()
+    period = len(cfg.xlstm_pattern)
+    n_periods = cfg.n_layers // period
+    assert n_periods * period == cfg.n_layers, "n_layers must tile the pattern"
+    ke, kb, kh = jax.random.split(key, 3)
+
+    def init_period(k):
+        pp = {}
+        pks = jax.random.split(k, period)
+        for i, kind in enumerate(cfg.xlstm_pattern):
+            init = init_mlstm_params if kind == "m" else init_slstm_params
+            pp[f"{i}_{kind}"] = init(pks[i], cfg, dt)
+        return pp
+
+    periods = jax.vmap(init_period)(jax.random.split(kb, n_periods))
+    p = {
+        "embed": common.truncated_normal_init(ke, (cfg.vocab, cfg.d_model), 1.0, dt),
+        "periods": periods,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": common.truncated_normal_init(kh, (cfg.d_model, cfg.vocab), 1.0, dt),
+    }
+    del kinds
+    return p
+
+
+def _period_apply(cfg: LMConfig, pp: Dict[str, Any], x: jax.Array):
+    for name in sorted(pp.keys(), key=lambda s: int(s.split("_")[0])):
+        kind = name.split("_")[1]
+        block = mlstm_block if kind == "m" else slstm_block
+        x, _ = block(pp[name], cfg, x)
+        x = constrain(x, "batch", None, None)
+    return x
+
+
+def logits_fn(params: Dict[str, Any], cfg: LMConfig):
+    dt = jnp.dtype(cfg.dtype)
+
+    def f(h):
+        return constrain(h @ params["lm_head"].astype(dt), "batch", None, "vocab")
+
+    return f
+
+
+def forward(params: Dict[str, Any], cfg: LMConfig, tokens: jax.Array,
+            embeds: Optional[jax.Array] = None,
+            return_hidden: bool = False) -> Tuple[jax.Array, jax.Array]:
+    dt = jnp.dtype(cfg.dtype)
+    x = params["embed"][tokens].astype(dt) if embeds is None else embeds.astype(dt)
+    x = constrain(x, "batch", None, None)
+
+    def body(x, pp):
+        return _period_apply(cfg, pp, x), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["periods"])
+    x = common.rms_norm(params["final_norm"], x, cfg.rms_eps)
+    if return_hidden:
+        return x, jnp.zeros((), jnp.float32)
+    return logits_fn(params, cfg)(x), jnp.zeros((), jnp.float32)
+
+
+class XLSTMCache(NamedTuple):
+    """Decode-time recurrent state for every layer (dict keyed like periods)."""
+    states: Any          # pytree: per period-index, per block-name state
+    length: jax.Array
+
+
+def init_cache(params: Dict[str, Any], cfg: LMConfig, batch: int) -> XLSTMCache:
+    d = cfg.d_model
+    di = 2 * d
+    heads = cfg.n_heads
+    dh = di // heads
+    period = len(cfg.xlstm_pattern)
+    n_periods = cfg.n_layers // period
+    states = []
+    for pi in range(n_periods):
+        st = {}
+        for i, kind in enumerate(cfg.xlstm_pattern):
+            if kind == "m":
+                st[f"{i}_m"] = MLSTMState(
+                    c=jnp.zeros((batch, heads, dh, dh), jnp.float32),
+                    n=jnp.zeros((batch, heads, dh), jnp.float32),
+                    m=jnp.full((batch, heads), -1e30, jnp.float32),
+                    conv=jnp.zeros((batch, cfg.conv_width - 1, di), jnp.float32))
+            else:
+                st[f"{i}_s"] = SLSTMState(
+                    c=jnp.zeros((batch, d), jnp.float32),
+                    n=jnp.zeros((batch, d), jnp.float32),
+                    h=jnp.zeros((batch, d), jnp.float32),
+                    m=jnp.full((batch, d), -1e30, jnp.float32))
+        states.append(st)
+    return XLSTMCache(states=states, length=jnp.zeros((), jnp.int32))
+
+
+def decode_step(params: Dict[str, Any], cfg: LMConfig, tokens: jax.Array,
+                cache: XLSTMCache) -> Tuple[jax.Array, XLSTMCache]:
+    """tokens: (B, 1). O(1) per step — no KV cache, only recurrent state."""
+    dt = jnp.dtype(cfg.dtype)
+    x = params["embed"][tokens].astype(dt)
+    period = len(cfg.xlstm_pattern)
+    n_periods = cfg.n_layers // period
+    new_states = []
+    for pi in range(n_periods):
+        pp = jax.tree.map(lambda a: a[pi], params["periods"])
+        st_in = cache.states[pi]
+        st_out = {}
+        for i, kind in enumerate(cfg.xlstm_pattern):
+            name = f"{i}_{kind}"
+            if kind == "m":
+                x, st_out[name] = mlstm_block(pp[name], cfg, x, st_in[name])
+            else:
+                x2, st = slstm_block(pp[name], cfg, x, st_in[name])
+                x, st_out[name] = x2, st
+        new_states.append(st_out)
+    x = common.rms_norm(params["final_norm"], x, cfg.rms_eps)
+    logits = (x @ params["lm_head"].astype(dt))[:, 0]
+    return logits, XLSTMCache(states=new_states, length=cache.length + 1)

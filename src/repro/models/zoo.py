@@ -1,0 +1,86 @@
+"""Family dispatch: one API over dense / moe / ssm / hybrid / encdec models.
+
+``build(cfg)`` returns a ``ModelAPI`` whose members close over the family
+module. ``init_cache`` signatures are normalized to (params, batch, max_len);
+families with O(1) state ignore max_len.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, griffin, transformer, xlstm
+from repro.models import attention as attn_mod
+from repro.models.lm_types import LMConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: LMConfig
+    init: Callable[..., Any]                  # (key) -> params
+    forward: Callable[..., Any]               # (params, **inputs) -> (logits, aux)
+    decode_step: Callable[..., Any]           # (params, tokens, cache) -> (logits, cache)
+    init_cache: Callable[..., Any]            # (params, batch, max_len) -> cache
+    logits_fn: Callable[..., Any]             # (params) -> ((B,c,d) -> (B,c,V))
+    sub_quadratic: bool                       # eligible for long_500k
+    has_decode: bool = True
+
+
+def build(cfg: LMConfig) -> ModelAPI:
+    cfg.validate()
+    if cfg.family in ("dense", "moe"):
+        def init_cache(params, batch, max_len):
+            return attn_mod.init_kv_cache(cfg, cfg.n_layers, batch, max_len,
+                                          jnp.dtype(cfg.dtype))
+
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: transformer.init_params(key, cfg),
+            forward=lambda params, **kw: transformer.forward(params, cfg, **kw),
+            decode_step=lambda params, tokens, cache: transformer.decode_step(
+                params, cfg, tokens, cache),
+            init_cache=init_cache,
+            logits_fn=lambda params: transformer.logits_fn(params, cfg),
+            sub_quadratic=False,
+        )
+    if cfg.family == "ssm":
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: xlstm.init_params(key, cfg),
+            forward=lambda params, **kw: xlstm.forward(params, cfg, **kw),
+            decode_step=lambda params, tokens, cache: xlstm.decode_step(
+                params, cfg, tokens, cache),
+            init_cache=lambda params, batch, max_len: xlstm.init_cache(
+                params, cfg, batch),
+            logits_fn=lambda params: xlstm.logits_fn(params, cfg),
+            sub_quadratic=True,
+        )
+    if cfg.family == "hybrid":
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: griffin.init_params(key, cfg),
+            forward=lambda params, **kw: griffin.forward(params, cfg, **kw),
+            decode_step=lambda params, tokens, cache: griffin.decode_step(
+                params, cfg, tokens, cache),
+            init_cache=lambda params, batch, max_len: griffin.init_cache(
+                params, cfg, batch),
+            logits_fn=lambda params: griffin.logits_fn(params, cfg),
+            sub_quadratic=True,
+        )
+    if cfg.family == "encdec":
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(key, cfg),
+            forward=lambda params, **kw: encdec.forward(params, cfg, **kw),
+            decode_step=lambda params, tokens, cache: encdec.decode_step(
+                params, cfg, tokens, cache),
+            init_cache=lambda params, batch, max_len: encdec.init_cache(
+                params, cfg, batch, max_len),
+            logits_fn=lambda params: encdec.logits_fn(params, cfg),
+            sub_quadratic=False,
+        )
+    raise ValueError(f"unknown family {cfg.family}")

@@ -1,0 +1,10 @@
+"""Sharding plans: FSDP/TP/SP/EP PartitionSpec rules with divisibility fallbacks."""
+
+from repro.sharding.plans import (
+    Plan,
+    make_plan,
+    param_shardings,
+    spec_for_param,
+)
+
+__all__ = ["Plan", "make_plan", "param_shardings", "spec_for_param"]

@@ -1,0 +1,226 @@
+"""PartitionSpec plans for the LM zoo (FSDP / TP / SP / EP) + MD.
+
+Rule system
+-----------
+Parameters are matched by their tree path (joined with "/"). Each rule maps
+the *logical roles* of a weight's dims onto mesh axes:
+
+  train mode:  d_in -> fsdp axes ("pod","data"), d_out/heads/experts -> "model"
+  serve mode:  weights TP-only over "model" (no per-layer all-gathers at
+               decode), or 2-D ("model" + fsdp) when HBM requires it.
+
+Every axis assignment is guarded by divisibility — if a dim does not tile
+the axis it falls back (combined axes -> "data" only -> unsharded), so tiny
+archs (whisper d=512, xlstm d=768, 4 heads) degrade gracefully instead of
+failing to lower. That fallback IS the plan layer's job: one rule set, 10
+architectures.
+
+Stacked leaves (under blocks/periods/enc/dec/tail) carry a leading
+layer-stack dim that is never sharded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.lm_types import LMConfig
+
+_STACK_MARKERS = ("blocks", "periods", "enc", "dec", "tail")
+
+# (path regex, dim-role template). Roles: "fsdp", "model", None.
+# Templates apply to the *unstacked* shape (leading layer dim stripped).
+_PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    # top-level embeddings / heads
+    (r"embed$",                      ("model", "fsdp")),
+    (r"lm_head$",                    ("fsdp", "model")),
+    (r"pos_dec$",                    (None, "fsdp")),
+    # attention projections (dense/moe/hybrid/encdec share names)
+    (r"(attn|self_attn|cross_attn)/wq/w$", ("fsdp", "model")),
+    (r"(attn|self_attn|cross_attn)/wk/w$", ("fsdp", "model")),
+    (r"(attn|self_attn|cross_attn)/wv/w$", ("fsdp", "model")),
+    (r"(attn|self_attn|cross_attn)/wo/w$", ("model", "fsdp")),
+    (r"(attn|self_attn|cross_attn)/w[qkv]/b$", ("model",)),
+    (r"(attn|self_attn|cross_attn)/wo/b$",     (None,)),
+    # dense FFN (SwiGLU / GELU-MLP)
+    (r"(ffn|mlp|shared)/wi$",        ("fsdp", "model")),
+    (r"(ffn|mlp|shared)/wg$",        ("fsdp", "model")),
+    (r"(ffn|mlp|shared)/wo$",        ("model", "fsdp")),
+    (r"mlp/bi$",                     ("model",)),
+    (r"mlp/bo$",                     (None,)),
+    # MoE: expert-parallel over "model"
+    (r"ffn/router$",                 ("fsdp", None)),
+    (r"ffn/w[ig]$",                  ("model", "fsdp", None)),
+    (r"ffn/wo$",                     ("model", None, "fsdp")),
+    (r"shared_gate$",                (None, None)),
+    # xLSTM mLSTM
+    (r"w_up$",                       ("fsdp", "model")),
+    (r"w_[qkv]$",                    ("fsdp", "model")),
+    (r"w_[if]$",                     ("fsdp", None)),
+    (r"w_down$",                     ("model", "fsdp")),
+    # sLSTM
+    (r"w_zifo$",                     ("fsdp", "model")),
+    (r"r_zifo$",                     (None, None, None, None)),
+    (r"up[12]$",                     ("fsdp", "model")),
+    (r"down$",                       ("model", "fsdp")),
+    # Griffin / RG-LRU: recurrence width dr is elementwise -> pure TP
+    (r"w_[yx]$",                     ("fsdp", "model")),
+    (r"w_[ri]gate$",                 ("model", None, None)),
+    (r"b_[ri]gate$",                 ("model",)),
+    (r"lam$",                        ("model",)),
+    (r"w_out$",                      ("model", "fsdp")),
+    (r"conv_w$",                     (None, "model")),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    mesh: Mesh
+    mode: str                        # train | serve
+    serve_weight_mode: str = "tp"    # tp | 2d (2d: add fsdp axes in serve)
+
+    @property
+    def fsdp_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+
+    @property
+    def batch_axes(self) -> Tuple[str, ...]:
+        return self.fsdp_axes
+
+    def axis_size(self, axes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+
+def make_plan(mesh: Mesh, mode: str, serve_weight_mode: str = "tp") -> Plan:
+    assert mode in ("train", "serve")
+    return Plan(mesh=mesh, mode=mode, serve_weight_mode=serve_weight_mode)
+
+
+def _resolve_role(plan: Plan, role: Optional[str], dim: int):
+    """Role -> concrete mesh axes with divisibility fallback."""
+    if role is None:
+        return None
+    if role == "model":
+        return "model" if dim % plan.axis_size("model") == 0 else None
+    if role == "fsdp":
+        if plan.mode == "serve" and plan.serve_weight_mode == "tp":
+            return None                       # weights stay replicated on fsdp axes
+        axes = plan.fsdp_axes
+        if dim % plan.axis_size(axes) == 0:
+            return axes if len(axes) > 1 else axes[0]
+        if "data" in axes and dim % plan.axis_size("data") == 0:
+            return "data"
+        return None
+    raise ValueError(role)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def spec_for_param(plan: Plan, path_str: str, shape: Sequence[int]) -> P:
+    stacked = any(f"{m}/" in path_str or path_str.startswith(f"{m}/")
+                  for m in _STACK_MARKERS)
+    core_shape = tuple(shape[1:]) if stacked and len(shape) > 1 else tuple(shape)
+
+    template = None
+    for pat, tmpl in _PARAM_RULES:
+        if re.search(pat, path_str) and len(tmpl) == len(core_shape):
+            template = tmpl
+            break
+    if template is None:
+        # Generic fallback: last dim -> model, largest other dim -> fsdp.
+        if len(core_shape) >= 2:
+            template = [None] * len(core_shape)
+            template[-1] = "model"
+            rest = list(range(len(core_shape) - 1))
+            big = max(rest, key=lambda i: core_shape[i])
+            template[big] = "fsdp"
+            template = tuple(template)
+        else:
+            template = (None,) * len(core_shape)
+
+    axes = tuple(_resolve_role(plan, r, d) for r, d in zip(template, core_shape))
+    # No mesh axis may appear twice in one spec; later dims lose.
+    seen = set()
+    cleaned = []
+    for a in axes:
+        names = (a,) if isinstance(a, str) else (a or ())
+        if any(n in seen for n in names):
+            cleaned.append(None)
+        else:
+            seen.update(names)
+            cleaned.append(a)
+    if stacked and len(shape) > 1:
+        cleaned = [None] + cleaned
+    return P(*cleaned)
+
+
+def param_shardings(plan: Plan, params_shape_tree: Any) -> Any:
+    """NamedSharding pytree matching a params shape/eval_shape tree."""
+
+    def leaf(path, leaf_shape):
+        spec = spec_for_param(plan, _path_str(path), leaf_shape.shape)
+        return NamedSharding(plan.mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, params_shape_tree)
+
+
+# ----------------------------------------------------------- activation specs
+
+def tokens_spec(plan: Plan) -> P:
+    return P(plan.batch_axes, None)
+
+
+def batch_spec(plan: Plan, batch: int, extra_dims: int = 1) -> P:
+    """Batch-sharded spec with divisibility fallback (batch=1 cells)."""
+    axes = plan.batch_axes
+    if batch % plan.axis_size(axes) != 0:
+        if batch % plan.axis_size("data") == 0:
+            axes = ("data",)
+        else:
+            axes = None
+    return P(axes, *([None] * extra_dims))
+
+
+def kv_cache_spec(plan: Plan, batch: int, seq: int, kv_heads: int) -> P:
+    """(L, B, S, Hkv, hd): batch over data(+pod), sequence over model.
+
+    Sequence-sharding is uniform across kv_heads in {1, 2, 8, 16}; softmax
+    reductions over the sharded S lower to all-reduces (decode_attention).
+    """
+    b_axes = plan.batch_axes
+    if batch % plan.axis_size(b_axes) != 0:
+        b_axes = ("data",) if batch % plan.axis_size("data") == 0 else None
+    s_axis = "model" if seq % plan.axis_size("model") == 0 else None
+    return P(None, b_axes, s_axis, None, None)
+
+
+def logits_spec(plan: Plan, vocab: int, with_seq: bool = True,
+                batch: Optional[int] = None) -> P:
+    v_axis = "model" if vocab % plan.axis_size("model") == 0 else None
+    b_axes = plan.batch_axes
+    if batch is not None and batch % plan.axis_size(b_axes) != 0:
+        b_axes = ("data",) if batch % plan.axis_size("data") == 0 else None
+    if with_seq:
+        return P(b_axes, None, v_axis)
+    return P(b_axes, v_axis)

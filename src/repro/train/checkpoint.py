@@ -1,0 +1,159 @@
+"""Fault-tolerant checkpointing: atomic, async, elastic.
+
+Design (DESIGN.md Sec. 5):
+  * atomic: writes go to ``<dir>/tmp.<step>`` and are renamed to
+    ``<dir>/step_<step>`` only when complete — a crash mid-save never
+    corrupts the latest checkpoint.
+  * async: ``save_async`` snapshots device arrays to host (the only
+    synchronous part) and writes in a background thread, off the step
+    critical path.
+  * elastic: the on-disk format is mesh-free (full logical arrays + a JSON
+    tree manifest); ``restore`` re-places leaves onto ANY mesh/sharding —
+    restart on a different slice shape is a first-class path, tested.
+  * retention: keep the newest ``keep`` checkpoints; GC is part of save.
+
+On multi-host deployments the same format shards by host with
+``jax.experimental.multihost_utils``; this container is single-process, so
+each leaf is written whole (device_get of a sharded array gathers it).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Callable, List, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy's npz format cannot represent ml_dtypes (bf16 round-trips as void);
+# store raw uint views and re-view on load using the manifest dtype.
+_UINT_OF_SIZE = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+def _to_native(a: np.ndarray) -> np.ndarray:
+    if a.dtype.kind in "fiub" and a.dtype.str != "|V2":
+        try:
+            np.dtype(a.dtype.name)
+            if a.dtype.name in ("bfloat16", "float8_e4m3fn", "float8_e5m2"):
+                raise TypeError
+            return a
+        except TypeError:
+            pass
+    return a.view(_UINT_OF_SIZE[a.dtype.itemsize])
+
+
+def _from_native(a: np.ndarray, dtype_name: str) -> np.ndarray:
+    if a.dtype.name == dtype_name:
+        return a
+    return a.view(np.dtype(getattr(ml_dtypes, dtype_name, dtype_name)))
+
+
+def _flatten_with_paths(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    paths = [
+        "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]
+    ]
+    return leaves, paths, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, keep: int = 3) -> str:
+    """Synchronous atomic save. Returns the final checkpoint path."""
+    leaves, paths, _ = _flatten_with_paths(tree)
+    host = [np.asarray(jax.device_get(l)) for l in leaves]
+    tmp = os.path.join(ckpt_dir, f"tmp.{step}")
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(tmp, exist_ok=True)
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{f"leaf_{i}": _to_native(a) for i, a in enumerate(host)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": int(step), "paths": paths,
+                   "dtypes": [a.dtype.name for a in host],
+                   "shapes": [list(a.shape) for a in host]}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+class AsyncSave:
+    def __init__(self, thread: threading.Thread, path: str):
+        self._thread = thread
+        self.path = path
+
+    def wait(self) -> str:
+        self._thread.join()
+        return self.path
+
+
+def save_async(ckpt_dir: str, step: int, tree: Any, keep: int = 3) -> AsyncSave:
+    """Device->host snapshot now; disk write in a background thread."""
+    leaves, paths, _ = _flatten_with_paths(tree)
+    host = [np.asarray(jax.device_get(l)) for l in leaves]   # snapshot
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+
+    def _write():
+        tmp = os.path.join(ckpt_dir, f"tmp.{step}")
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{f"leaf_{i}": _to_native(a) for i, a in enumerate(host)})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": int(step), "paths": paths,
+                       "dtypes": [a.dtype.name for a in host],
+                       "shapes": [list(a.shape) for a in host]}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        _gc(ckpt_dir, keep)
+
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    return AsyncSave(t, final)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)$", d))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
+            shardings: Any = None) -> Tuple[Any, int]:
+    """Restore into the structure of ``like``; optionally re-place leaves
+    with ``shardings`` (a matching pytree of NamedSharding) — the elastic
+    path: the target mesh need not match the mesh that saved.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, _, treedef = _flatten_with_paths(like)
+    arrays = [_from_native(data[f"leaf_{i}"], manifest["dtypes"][i])
+              for i in range(len(leaves))]
+    if shardings is not None:
+        sh_leaves = treedef.flatten_up_to(shardings)
+        arrays = [jax.device_put(a, s) for a, s in zip(arrays, sh_leaves)]
+    else:
+        arrays = [jax.device_put(a) for a in arrays]
+    return treedef.unflatten(arrays), step
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(
+        int(m.group(1)) for d in os.listdir(ckpt_dir)
+        if (m := re.match(r"step_(\d+)$", d)))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)

@@ -1,0 +1,91 @@
+"""AdamW (+ global-norm clipping, schedules) as pure pytree transforms.
+
+No optax offline — this is the framework's own optimizer. States are plain
+pytrees, so they inherit param shardings leaf-by-leaf (ZeRO-3: m/v live
+wherever the param lives).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array]     # step -> learning rate
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params: Any) -> AdamWState:
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(mu=jax.tree.map(zeros, params),
+                          nu=jax.tree.map(zeros, params),
+                          count=jnp.zeros((), jnp.int32))
+
+    def update(self, grads: Any, state: AdamWState, params: Any
+               ) -> Tuple[Any, AdamWState, jax.Array]:
+        """Returns (new_params, new_state, grad_norm)."""
+        gnorm = global_norm(grads)
+        if self.grad_clip > 0:
+            scale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gnorm, 1e-12))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+        count = state.count + 1
+        b1c = 1.0 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** count.astype(jnp.float32)
+        lr = self.lr(count)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m = self.b1 * m + (1 - self.b1) * g32
+            v = self.b2 * v + (1 - self.b2) * g32 * g32
+            step = (m / b1c) / (jnp.sqrt(v / b2c) + self.eps)
+            if self.weight_decay > 0 and p.ndim >= 2:
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, AdamWState(mu=new_m, nu=new_v, count=count), gnorm
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def cosine_schedule(peak: float, warmup: int, total: int,
+                    floor: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(s < warmup, warm, cos)
+    return lr
+
+
+def exp_decay_schedule(start: float, decay_steps: int,
+                       decay_rate: float) -> Callable[[jax.Array], jax.Array]:
+    """DeePMD's LR protocol: lr(t) = start * rate^(t / decay_steps)."""
+    def lr(step):
+        return start * decay_rate ** (step.astype(jnp.float32) / decay_steps)
+    return lr

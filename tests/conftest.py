@@ -1,0 +1,30 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests see 1 device;
+only tests/distributed/* scripts (run via subprocess) force 8 host devices.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import DPConfig, init_dp_params
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg() -> DPConfig:
+    return DPConfig(ntypes=1, rcut=4.0, rcut_smth=2.0, sel=(48,),
+                    type_map=("Cu",), embed_widths=(8, 16, 32), axis_neuron=4,
+                    fit_widths=(24, 24, 24), table_lower=-1.0, table_upper=9.0,
+                    cheb_order=48)
+
+
+@pytest.fixture(scope="session")
+def tiny_water_cfg() -> DPConfig:
+    return DPConfig(ntypes=2, rcut=4.0, rcut_smth=0.5, sel=(16, 32),
+                    type_map=("O", "H"), embed_widths=(8, 16, 32),
+                    axis_neuron=4, fit_widths=(24, 24, 24),
+                    table_lower=-1.0, table_upper=9.0, cheb_order=48)
+
+
+@pytest.fixture(scope="session")
+def tiny_params(tiny_cfg):
+    return init_dp_params(jax.random.PRNGKey(0), tiny_cfg)

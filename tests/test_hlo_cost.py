@@ -1,0 +1,90 @@
+"""HLO cost model: trip counts, dot FLOPs, fusion bytes, collective split."""
+
+import numpy as np
+
+from repro.analysis import hlo_cost, roofline
+
+SYNTH = """
+HloModule test
+
+%fused_mul (p0: f32[8,16], p1: f32[8,16]) -> f32[8,16] {
+  %p0 = f32[8,16]{1,0} parameter(0)
+  %p1 = f32[8,16]{1,0} parameter(1)
+  ROOT %m = f32[8,16]{1,0} multiply(%p0, %p1)
+}
+
+%cond (c: (s32[], f32[8,16])) -> pred[] {
+  %c = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%c), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%body (b: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %b = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%b), index=0
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  %x = f32[8,16]{1,0} get-tuple-element(%b), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %d = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%d), replica_groups=[2,4]<=[4,2]T(1,0), to_apply=%fused_mul
+  ROOT %t = (s32[], f32[8,16]) tuple(%i2, %ar)
+}
+
+ENTRY %main (a: f32[8,16], b2: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %b2 = f32[8,16]{1,0} parameter(1)
+  %f = f32[8,16]{1,0} fusion(%a, %b2), kind=kLoop, calls=%fused_mul
+  %init = s32[] constant(0)
+  %tup = (s32[], f32[8,16]) tuple(%init, %f)
+  %w2 = (s32[], f32[8,16]) while(%tup), condition=%cond, body=%body
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%w2), index=1
+}
+"""
+
+
+def test_trip_count_and_dot_flops():
+    totals = hlo_cost.analyze_text(SYNTH)
+    # dot: 2 * 8*16 * 16 = 4096 flops, x10 trips
+    assert totals.flops == 4096 * 10
+
+
+def test_fusion_and_collective_bytes():
+    totals = hlo_cost.analyze_text(SYNTH)
+    # entry fusion: 2 operands + result = 3 * 512B
+    # while body per trip: dot (2 op + res: x(512)+w(1024)+d(512)) and
+    # all-reduce result 512B x 2 (read+write) — x10 trips
+    assert totals.coll_bytes["all-reduce"] == 512 * 10
+    assert totals.bytes_accessed >= 3 * 512 + 10 * (2048 + 1024)
+
+
+def test_comment_stripping():
+    txt = SYNTH.replace("f32[8,16]) parameter(0)",
+                        "f32[8,16]) parameter(0) /*index=5*/")
+    totals = hlo_cost.analyze_text(txt)
+    assert totals.flops == 4096 * 10
+
+
+def test_pod_crossing_detection():
+    # groups [2,4]<=[4,2]T(1,0): with mesh (2,2,2) (pod,data,model)
+    n, crosses = roofline._group_crosses_pod(
+        "replica_groups=[2,4]<=[4,2]T(1,0)", (2, 2, 2))
+    assert n == 4
+    assert crosses          # groups of 4 on an 8-dev mesh span the pod axis
+    n2, crosses2 = roofline._group_crosses_pod(
+        "replica_groups=[4,2]<=[8]", (2, 2, 2))
+    assert n2 == 2
+    assert not crosses2     # adjacent pairs stay within a pod
+
+
+def test_wire_factors():
+    assert roofline._wire_factor("all-reduce", 4) == 2 * 3 / 4
+    assert roofline._wire_factor("all-gather", 8) == 7 / 8
+    assert roofline._wire_factor("collective-permute", 16) == 1.0
+
+
+def test_dtype_bytes_parsing():
+    assert hlo_cost._type_bytes("bf16[4,8]{1,0}") == 64
+    assert hlo_cost._type_bytes("(f32[2,2], s32[])") == 20
+    assert hlo_cost._type_bytes("pred[16]") == 16

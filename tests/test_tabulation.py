@@ -1,0 +1,67 @@
+"""Tabulation properties: quintic Hermite + Chebyshev vs the exact net."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import embedding, tabulation
+from repro.core.types import DPConfig
+
+
+def _net(seed=0, widths=(8, 16, 32)):
+    cfg = DPConfig(embed_widths=widths, sel=(32,))
+    nets = embedding.init_embedding_params(jax.random.PRNGKey(seed), cfg,
+                                           jnp.float32)
+    return embedding.embedding_scalar_fn(nets["0"])
+
+
+def test_quintic_interpolates_nodes_exactly():
+    g = _net()
+    table = tabulation.build_quintic_table(g, 0.0, 4.0, 0.25)
+    nodes = jnp.arange(0.0, 4.0, 0.25)
+    np.testing.assert_allclose(np.asarray(tabulation.quintic_eval(table, nodes)),
+                               np.asarray(g(nodes)), rtol=2e-5, atol=1e-6)
+
+
+def test_quintic_c2_continuity_at_nodes():
+    """Value/1st/2nd derivative match at interval joints by construction."""
+    g = _net()
+    table = tabulation.build_quintic_table(g, 0.0, 4.0, 0.5)
+    eps = 1e-3
+    x = jnp.asarray([1.0 - eps, 1.0 + eps])
+    v = tabulation.quintic_eval(table, x)
+    assert float(jnp.abs(v[0] - v[1]).max()) < 1e-3
+
+
+@settings(max_examples=10, deadline=None)
+@given(x=st.floats(0.05, 3.95))
+def test_quintic_pointwise_error_property(x):
+    g = _net()
+    table = tabulation.build_quintic_table(g, 0.0, 4.0, 0.01)
+    v = tabulation.quintic_eval(table, jnp.asarray([x], jnp.float32))
+    ref = g(jnp.asarray([x], jnp.float32))
+    assert float(jnp.abs(v - ref).max()) < 1e-4
+
+
+def test_cheb_converges_with_order():
+    g = _net()
+    xs = jnp.linspace(0.05, 3.95, 101)
+    ref = g(xs)
+    errs = []
+    for order in (8, 24, 64):
+        table = tabulation.build_cheb_table(g, 0.0, 4.0, order)
+        errs.append(float(jnp.abs(tabulation.cheb_eval(table, xs) - ref).max()))
+    assert errs[0] > errs[2]
+    assert errs[2] < 1e-4, errs
+
+
+def test_interval_size_vs_model_size_tradeoff():
+    """Paper Sec. 3.2: table size grows as interval shrinks (model-size
+    ledger for the accuracy ladder)."""
+    g = _net()
+    sizes = []
+    for step in (0.1, 0.01):
+        t = tabulation.build_quintic_table(g, 0.0, 4.0, step)
+        sizes.append(t["coeffs"].size)
+    assert sizes[1] > 9 * sizes[0]

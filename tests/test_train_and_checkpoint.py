@@ -1,0 +1,128 @@
+"""Training + checkpointing: convergence, restart determinism, retention,
+AdamW vs a numpy reference."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.types import DPConfig
+from repro.data.tokens import TokenPipeline
+from repro.models import build
+from repro.train import checkpoint, optim
+from repro.train.dp_trainer import train_dp
+from repro.train.steps import TrainState, init_train_state, make_train_step
+
+
+def test_adamw_matches_numpy_reference():
+    opt = optim.AdamW(lr=lambda s: 1e-2, b1=0.9, b2=0.99, eps=1e-8,
+                      weight_decay=0.0, grad_clip=0.0)
+    p = {"w": jnp.asarray([[1.0, -2.0], [0.5, 3.0]])}
+    g = {"w": jnp.asarray([[0.1, -0.2], [0.3, 0.4]])}
+    st = opt.init(p)
+    p1, st1, _ = opt.update(g, st, p)
+    # numpy reference (bias-corrected adam)
+    m = 0.1 * np.asarray(g["w"])
+    v = 0.01 * np.asarray(g["w"]) ** 2
+    step = (m / 0.1) / (np.sqrt(v / 0.01) + 1e-8)
+    np.testing.assert_allclose(np.asarray(p1["w"]),
+                               np.asarray(p["w"]) - 1e-2 * step, rtol=1e-6)
+
+
+def test_grad_clip_bounds_update():
+    opt = optim.AdamW(lr=lambda s: 1.0, grad_clip=1e-3, weight_decay=0.0)
+    p = {"w": jnp.ones((4,))}
+    g = {"w": jnp.full((4,), 100.0)}
+    st = opt.init(p)
+    _, _, gnorm = opt.update(g, st, p)
+    assert float(gnorm) == pytest.approx(200.0)
+
+
+def test_lm_loss_decreases():
+    cfg = configs.get_reduced("qwen3-1.7b")
+    api = build(cfg)
+    opt = optim.AdamW(lr=optim.cosine_schedule(3e-3, 5, 100))
+    state = init_train_state(api, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(api, opt, loss_chunk=16))
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=32, global_batch=8)
+    losses = []
+    for it in range(40):
+        state, m = step(state, pipe.batch(it))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1, losses[::8]
+
+
+def test_dp_training_converges():
+    cfg = DPConfig(ntypes=1, rcut=4.0, rcut_smth=2.0, sel=(48,),
+                   type_map=("Cu",), embed_widths=(8, 16, 32), axis_neuron=4,
+                   fit_widths=(32, 32, 32))
+    _, log = train_dp(cfg, steps=120, n_configs=8, batch_size=4,
+                      log_every=40, verbose=False)
+    assert log[-1]["rmse_f"] < 0.3 * log[0]["rmse_f"]
+
+
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.asarray(3), "d": jnp.ones((4,), jnp.bfloat16)}}
+    d = str(tmp_path)
+    for s in (1, 2, 3, 4):
+        checkpoint.save(d, s, jax.tree.map(lambda x: x + s, tree), keep=2)
+    assert checkpoint.latest_step(d) == 4
+    assert sorted(os.listdir(d)) == ["step_00000003", "step_00000004"]
+    restored, step = checkpoint.restore(d, tree)
+    assert step == 4
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]) + 4)
+    assert restored["b"]["d"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_async(tmp_path):
+    tree = {"w": jnp.ones((8, 8))}
+    h = checkpoint.save_async(str(tmp_path), 7, tree)
+    path = h.wait()
+    assert os.path.isdir(path)
+    restored, step = checkpoint.restore(str(tmp_path), tree)
+    assert step == 7
+
+
+def test_restart_is_bitwise_deterministic(tmp_path):
+    """Same pipeline + restored state => identical continued trajectory."""
+    cfg = configs.get_reduced("glm4-9b")
+    api = build(cfg)
+    opt = optim.AdamW(lr=lambda s: 1e-3)
+    step = jax.jit(make_train_step(api, opt, loss_chunk=16))
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=16, global_batch=4)
+
+    state = init_train_state(api, opt, jax.random.PRNGKey(0))
+    for it in range(5):
+        state, _ = step(state, pipe.batch(it))
+    checkpoint.save(str(tmp_path), 5, state)
+    cont_a = []
+    sa = state
+    for it in range(5, 8):
+        sa, m = step(sa, pipe.batch(it))
+        cont_a.append(float(m["loss"]))
+
+    restored, s0 = checkpoint.restore(str(tmp_path), jax.eval_shape(
+        lambda: state))
+    assert s0 == 5
+    cont_b = []
+    sb = restored
+    for it in range(5, 8):
+        sb, m = step(sb, pipe.batch(it))
+        cont_b.append(float(m["loss"]))
+    assert cont_a == cont_b
+
+
+def test_data_pipeline_determinism():
+    p1 = TokenPipeline(vocab=101, seq_len=8, global_batch=4, seed=3)
+    p2 = TokenPipeline(vocab=101, seq_len=8, global_batch=4, seed=3)
+    b1, b2 = p1.batch(17), p2.batch(17)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = p1.batch(18)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
