@@ -1,0 +1,108 @@
+"""MD stepping-engine benchmark: scan-segment vs seed python-loop.
+
+Times the two engines of ``md/driver.py`` on the copper protocol (CPU,
+small box — where per-step dispatch overhead is the dominant tax the fused
+engine removes) and writes ``BENCH_md.json`` so CI records the perf
+trajectory per PR:
+
+  PYTHONPATH=src python benchmarks/md_step_time.py [--tiny] [--out BENCH_md.json]
+
+Both engines are warmed first (compiles cached at module level), then each
+run is repeated ``--reps`` times and the median us/step/atom reported.
+"""
+
+import argparse
+import json
+import statistics
+import sys
+
+import jax
+
+from repro.core import dp_model
+from repro.core.types import DPConfig
+from repro.md import driver, lattice
+
+
+def copper_cfg(tiny: bool) -> DPConfig:
+    if tiny:
+        return DPConfig(ntypes=1, rcut=4.0, rcut_smth=2.0, sel=(32,),
+                        type_map=("Cu",), embed_widths=(8, 16, 32),
+                        axis_neuron=4, fit_widths=(24, 24, 24))
+    return DPConfig(ntypes=1, rcut=4.0, rcut_smth=2.0, sel=(48,),
+                    type_map=("Cu",), embed_widths=(8, 16, 32),
+                    axis_neuron=4, fit_widths=(24, 24, 24))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke shape: smallest box/model, fewer steps")
+    ap.add_argument("--nx", type=int, default=2, help="FCC supercell edge")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--rebuild-every", type=int, default=50)
+    ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--impl", default="mlp", choices=("mlp", "quintic", "cheb"))
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="exit nonzero if scan/python speedup falls below")
+    ap.add_argument("--out", default="BENCH_md.json")
+    args = ap.parse_args(argv)
+
+    steps = args.steps or 99
+    reps = args.reps or (3 if args.tiny else 5)
+    cfg = copper_cfg(args.tiny)
+    params = dp_model.init_dp_params(jax.random.PRNGKey(0), cfg)
+    if args.impl != "mlp":
+        params = dp_model.tabulate_model(
+            params, cfg, "quintic" if args.impl == "quintic" else "cheb")
+    pos, typ, box = lattice.fcc_copper(args.nx, args.nx, args.nx)
+    kw = dict(steps=steps, dt_fs=1.0, temp_k=330.0, skin=1.0,
+              rebuild_every=args.rebuild_every, thermo_every=50,
+              impl=args.impl)
+
+    print(f"{len(pos)} Cu atoms, {steps} steps, rebuild every "
+          f"{args.rebuild_every}, impl={args.impl}, reps={reps}")
+    results = {}
+    for engine in ("python", "scan"):
+        driver.run_md(cfg, params, pos, typ, box, engine=engine, **kw)  # warm
+        times = [driver.run_md(cfg, params, pos, typ, box, engine=engine,
+                               **kw).us_per_step_atom for _ in range(reps)]
+        results[engine] = {
+            "us_per_step_atom_median": statistics.median(times),
+            "us_per_step_atom_min": min(times),
+            "us_per_step_atom_all": times,
+        }
+        print(f"  engine={engine:7s} median "
+              f"{results[engine]['us_per_step_atom_median']:8.2f} "
+              f"us/step/atom  (min {min(times):.2f})")
+
+    speedup = (results["python"]["us_per_step_atom_median"]
+               / results["scan"]["us_per_step_atom_median"])
+    print(f"scan-segment speedup over python-loop: {speedup:.2f}x")
+
+    payload = {
+        "benchmark": "md_step_time",
+        "system": f"fcc_cu_{args.nx}x{args.nx}x{args.nx}",
+        "n_atoms": len(pos),
+        "steps": steps,
+        "rebuild_every": args.rebuild_every,
+        "impl": args.impl,
+        "tiny": args.tiny,
+        "backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "python_loop": results["python"],
+        "scan_segment": results["scan"],
+        "speedup_scan_over_python": speedup,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {args.out}")
+
+    if args.min_speedup is not None and speedup < args.min_speedup:
+        print(f"FAIL: speedup {speedup:.2f}x < required "
+              f"{args.min_speedup:.2f}x")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,9 +2,12 @@
 
 99 Velocity-Verlet steps at dt=1 fs, Maxwell-Boltzmann init at 330 K,
 neighbor list with 2 A skin rebuilt every 50 steps, thermo every 50 —
-run with the FULL implementation ladder and timed per step:
+run with the FULL implementation ladder and timed per step. The inner loop
+runs through the fused scan-segment engine (``md/stepper.py``) by default;
+``--engine python`` reproduces the seed per-step loop for comparison:
 
-  PYTHONPATH=src python examples/md_copper.py [--nx 4] [--steps 99]
+  PYTHONPATH=src python examples/md_copper.py [--nx 4] [--steps 99] \
+      [--engine scan|python]
 """
 
 import argparse
@@ -21,6 +24,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--nx", type=int, default=3, help="FCC supercell edge")
     ap.add_argument("--steps", type=int, default=99)
+    ap.add_argument("--engine", default="scan", choices=("scan", "python"),
+                    help="fused lax.scan segments (default) or the seed "
+                         "per-step python loop")
     args = ap.parse_args()
 
     # paper-shaped copper model, scaled for CPU (sel 128 vs the paper's 512)
@@ -37,11 +43,13 @@ def main():
     base = None
     for impl, p in ladder:
         res = driver.run_md(cfg, p, pos, typ, box, steps=args.steps,
-                            dt_fs=1.0, temp_k=330.0, impl=impl)
+                            dt_fs=1.0, temp_k=330.0, impl=impl,
+                            engine=args.engine)
         drift = abs(res.thermo[-1]["etot"] - res.thermo[0]["etot"])
         if base is None:
             base = res.us_per_step_atom
-        print(f"impl={impl:8s} {res.us_per_step_atom:8.2f} us/step/atom "
+        print(f"impl={impl:8s} engine={res.engine:6s} "
+              f"{res.us_per_step_atom:8.2f} us/step/atom "
               f"(speedup {base / res.us_per_step_atom:4.1f}x)  "
               f"drift {drift:.2e} eV  T_final {res.thermo[-1]['temp']:.0f} K")
 

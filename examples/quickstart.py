@@ -4,8 +4,6 @@ tabulation), and run molecular dynamics with the optimized model.
   PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax
-import numpy as np
 
 from repro.core import dp_model
 from repro.core.types import DPConfig

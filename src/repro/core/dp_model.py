@@ -145,9 +145,11 @@ def dp_atomic_energy(params: Dict[str, Any], cfg: DPConfig, rij: jax.Array,
 
 def dp_energy(params: Dict[str, Any], cfg: DPConfig, rij: jax.Array,
               nmask: jax.Array, atype: jax.Array, amask: jax.Array,
-              impl: Optional[str] = None) -> jax.Array:
+              impl: Optional[str] = None,
+              nsel_norm: Optional[int] = None) -> jax.Array:
     """Total energy E = sum_i E_i over valid atoms."""
-    e_i = dp_atomic_energy(params, cfg, rij, nmask, atype, impl)
+    e_i = dp_atomic_energy(params, cfg, rij, nmask, atype, impl,
+                           nsel_norm=nsel_norm)
     return jnp.sum(e_i * amask, axis=(-1,))
 
 
@@ -168,21 +170,27 @@ def gather_rij(pos: jax.Array, nlist: jax.Array, box: Optional[jax.Array] = None
     return rij, nmask
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "impl"))
+@functools.partial(jax.jit, static_argnames=("cfg", "impl", "nsel_norm"))
 def dp_energy_forces(params: Dict[str, Any], cfg: DPConfig, pos: jax.Array,
                      nlist: jax.Array, atype: jax.Array,
                      box: Optional[jax.Array] = None,
-                     impl: Optional[str] = None) -> Tuple[jax.Array, jax.Array, jax.Array]:
+                     impl: Optional[str] = None,
+                     nsel_norm: Optional[int] = None) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Single-process energy, forces, virial.
 
     Forces come from reverse-mode autodiff (the paper's backward
     propagation); the virial is the pair-wise contraction
     W = -sum_ij r_ij (x) dE/dr_ij (the analogue of ProdVirialSeA).
+
+    ``nsel_norm`` pins the descriptor normalization to a model's native
+    neighbor capacity when ``cfg.sel`` has been escalated past it (the
+    overflow fault-tolerance path): capacities change, physics does not.
     """
     amask = jnp.ones(pos.shape[0], _dtype(cfg))
 
     def e_of_rij(rij, nmask):
-        return dp_energy(params, cfg, rij, nmask, atype, amask, impl)
+        return dp_energy(params, cfg, rij, nmask, atype, amask, impl,
+                         nsel_norm=nsel_norm)
 
     rij, nmask = gather_rij(pos, nlist, box)
     e, de_drij = jax.value_and_grad(e_of_rij)(rij, nmask)

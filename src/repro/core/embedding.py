@@ -10,7 +10,6 @@ from __future__ import annotations
 from typing import Any, Callable, Dict, List
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import layers
 from repro.core.types import DPConfig

@@ -19,7 +19,7 @@ Two compressions of the scalar->R^M embedding map g:
 
 from __future__ import annotations
 
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,7 @@ per-sequence drift, giving compressible statistics.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

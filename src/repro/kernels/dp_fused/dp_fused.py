@@ -26,6 +26,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.6 names the TPU compiler-params class TPUCompilerParams.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 
 def _cheb_basis_pair(u: jax.Array, order: int, with_deriv: bool):
     """T_k(u) (and optionally T_k'(u)) for k < order, stacked on axis -1."""
@@ -164,7 +168,7 @@ def fused_fwd(
             out_specs=out_spec,
         ),
         out_shape=jax.ShapeDtypeStruct((a_pad, 4, m), s.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -207,7 +211,7 @@ def fused_bwd(
             jax.ShapeDtypeStruct((a_pad, n_pad), s.dtype),
             jax.ShapeDtypeStruct((a_pad, n_pad, 4), env.dtype),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

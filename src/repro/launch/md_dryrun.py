@@ -12,10 +12,11 @@ Cells (copper / water, per DESIGN.md Sec. 5):
               at 162k atoms/chip.
 
 Per cell x impl in {mlp, quintic, cheb, cheb_pallas}: lower + compile the
-shard_map'd distributed MD step (slabs over data[+pod], atom-decomposition
-over model, O(N) slab cell lists), then record memory_analysis (the paper's
-max-atoms-per-device story: the baseline materializes G_i, the fused path
-never does) and the roofline terms.
+shard_map'd distributed MD step scanned over a ``--segment-len``-step
+rebuild segment (the fused on-device inner loop of ``md/stepper.py`` — the
+program production actually dispatches), then record memory_analysis (the
+paper's max-atoms-per-device story: the baseline materializes G_i, the
+fused path never does) and the roofline terms.
 """
 
 import argparse
@@ -24,7 +25,7 @@ import json
 import sys
 import time
 import traceback
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +36,7 @@ from repro.analysis import roofline as rl
 from repro.core import dp_model
 from repro.core.types import COPPER_DP, WATER_DP, DPConfig
 from repro.launch import mesh as mesh_mod
-from repro.md import domain
+from repro.md import domain, stepper
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,7 +98,7 @@ def dp_model_flops(cfg: DPConfig, n_atoms: int, impl: str) -> float:
 
 
 def lower_md_cell(cell: MDCell, impl: str, mesh, multi_pod: bool,
-                  verbose: bool = True) -> Dict[str, Any]:
+                  verbose: bool = True, segment_len: int = 4) -> Dict[str, Any]:
     spatial_axis = ("pod", "data") if multi_pod else "data"
     n_slabs = mesh.shape["data"] * (mesh.shape.get("pod", 1))
     n_model = mesh.shape["model"]
@@ -121,6 +122,11 @@ def lower_md_cell(cell: MDCell, impl: str, mesh, multi_pod: bool,
             cfg, spec, mesh, cell.masses, cell.dt_fs, impl=impl,
             spatial_axis=spatial_axis, decomp="atoms", neighbor="cells")
 
+        def seg_fn(params, state):
+            # the production inner loop: one scan per rebuild segment
+            return stepper.scan_segment(
+                lambda st, p: step_fn(p, st), state, segment_len, params)
+
         sl = spec.atom_capacity
         state_shapes = domain.SlabState(
             pos=jax.ShapeDtypeStruct((n_slabs, sl, 3), jnp.float32),
@@ -134,7 +140,7 @@ def lower_md_cell(cell: MDCell, impl: str, mesh, multi_pod: bool,
                      ("pe", "ke", "n_atoms", "halo_overflow", "nbr_overflow")}
 
         t0 = time.time()
-        jitted = jax.jit(step_fn, in_shardings=(rep_tree, state_sh),
+        jitted = jax.jit(seg_fn, in_shardings=(rep_tree, state_sh),
                          out_shardings=(state_sh, thermo_sh),
                          donate_argnums=(1,))
         lowered = jitted.lower(params_shapes, state_shapes)
@@ -145,7 +151,8 @@ def lower_md_cell(cell: MDCell, impl: str, mesh, multi_pod: bool,
         mesh_shape = tuple(mesh.shape[a] for a in mesh.axis_names)
         report = rl.analyze_compiled(
             name, compiled, n_chips=mesh.size,
-            model_flops=dp_model_flops(cfg, n_atoms_global, impl),
+            model_flops=segment_len * dp_model_flops(cfg, n_atoms_global,
+                                                     impl),
             mesh_shape=mesh_shape)
         if impl == "cheb_pallas":
             # interpret=True lowers the kernel as a scanned XLA program whose
@@ -160,12 +167,13 @@ def lower_md_cell(cell: MDCell, impl: str, mesh, multi_pod: bool,
             fwd = a_chip * nm * 5 * 4 + a_chip * 4 * m * 4
             bwd = a_chip * nm * 5 * 4 + a_chip * 4 * m * 4 \
                 + a_chip * nm * 5 * 4
-            kernel_bytes = float(fwd + bwd)
+            kernel_bytes = float(segment_len * (fwd + bwd))
             # non-kernel traffic (neighbor search, env build, fitting net,
             # integration) approximated by the cheb XLA path's non-G share:
             # keep the artifact's bytes for everything outside the kernel by
             # subtracting the interpret-scan inflation (grid-step slices).
-            report.hlo_bytes = kernel_bytes + 6 * 4 * a_chip * nm  # env build
+            report.hlo_bytes = kernel_bytes \
+                + segment_len * 6 * 4 * a_chip * nm            # env build
             report.t_memory = report.hlo_bytes / report.hw.hbm_bw
             # Redundancy removal (paper Sec. 3.4.2): the kernel's pl.when
             # skips neighbor tiles past each atom tile's real count; the
@@ -211,6 +219,8 @@ def main(argv=None) -> int:
     ap.add_argument("--impl", action="append", choices=IMPLS, default=None)
     ap.add_argument("--mesh", choices=("pod", "multipod", "both"),
                     default="pod")
+    ap.add_argument("--segment-len", type=int, default=4,
+                    help="MD steps fused into the lowered scan segment")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 
@@ -228,7 +238,8 @@ def main(argv=None) -> int:
     for mesh, multi in meshes:
         for s in systems:
             for impl in impls:
-                row = lower_md_cell(cells[s], impl, mesh, multi)
+                row = lower_md_cell(cells[s], impl, mesh, multi,
+                                    segment_len=args.segment_len)
                 rows.append(row)
                 fails += row["status"] == "failed"
     if args.out:

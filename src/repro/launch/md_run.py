@@ -4,8 +4,10 @@
       --nx 8 --steps 99
 
 Uses the shard_map'd slab-decomposition step (halo exchange + reverse force
-comm + model-axis decomposition) with migration at neighbor-rebuild cadence;
-on a single device it degenerates to 1 slab x 1 shard of the same program.
+comm + model-axis decomposition), scanned on device in rebuild-length
+segments by the shared engine (``md/stepper.py``) with migration at segment
+boundaries; on a single device it degenerates to 1 slab x 1 shard of the
+same program.
 """
 
 import argparse
@@ -18,7 +20,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import dp_model
 from repro.core.types import DPConfig
-from repro.md import domain, integrator, lattice
+from repro.md import domain, integrator, lattice, stepper
 
 
 def main(argv=None):
@@ -89,22 +91,31 @@ def main(argv=None):
     step = domain.make_distributed_md_step(
         cfg, spec, mesh, (63.546,), args.dt, impl=args.impl, decomp="atoms",
         neighbor="cells")
+    run_segment = domain.make_segment_runner(step)
     migrate = domain.make_migration_step(spec, mesh)
 
     print(f"{n} atoms, {n_slabs} slabs x {args.model_axis} model shards "
           f"on {n_dev} devices")
     t0 = time.time()
-    for it in range(args.steps):
-        state, thermo = step(params_r, state)
-        assert int(thermo["halo_overflow"]) <= 0
-        assert int(thermo["nbr_overflow"]) <= 0
-        if (it + 1) % args.rebuild_every == 0:
+    base = 0
+    for seg_len in stepper.segment_schedule(args.steps, args.rebuild_every):
+        # one scan dispatch per segment; thermo/overflow fetched once after
+        state, thermo = run_segment(state, params_r, seg_len)
+        domain.check_segment_thermo(thermo)
+        pe = np.asarray(thermo["pe"])
+        ke = np.asarray(thermo["ke"])
+        natoms = np.asarray(thermo["n_atoms"])
+        for i in range(seg_len):
+            gstep = base + i + 1
+            if gstep % 33 == 0 or gstep == 1:
+                print(f"step {gstep:4d}  E_pot {pe[i]:+.4f}  "
+                      f"E_tot {pe[i]+ke[i]:+.4f}  atoms {int(natoms[i])}",
+                      flush=True)
+        base += seg_len
+        if seg_len == args.rebuild_every:   # full segment: migration cadence
             state, movf = migrate(state)
             assert int(movf) <= 0, "migration overflow"
-        if (it + 1) % 33 == 0 or it == 0:
-            pe, ke = float(thermo["pe"]), float(thermo["ke"])
-            print(f"step {it+1:4d}  E_pot {pe:+.4f}  E_tot {pe+ke:+.4f}  "
-                  f"atoms {int(thermo['n_atoms'])}", flush=True)
+    jax.block_until_ready(state)
     dt_wall = time.time() - t0
     print(f"{dt_wall/args.steps*1e6/n:.2f} us/step/atom wall (this host)")
 

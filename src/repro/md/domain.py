@@ -27,18 +27,32 @@ per chip": granularity taken to its limit (DESIGN.md Sec. 3).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
+
+try:                                         # jax >= 0.5 public API
+    from jax import shard_map as _shard_map
+except ImportError:                          # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
 
 from repro.core import dp_model
 from repro.core.types import DPConfig
 from repro.md import integrator
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """Version-compatible shard_map (check_vma was check_rep before 0.6)."""
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    if check_vma is None:
+        return _shard_map(f, **kw)
+    try:
+        return _shard_map(f, check_vma=check_vma, **kw)
+    except TypeError:
+        return _shard_map(f, check_rep=check_vma, **kw)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -395,6 +409,48 @@ def make_distributed_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
                      check_vma=False)
 
 
+# ------------------------------------------------------- segment integration
+
+def make_segment_runner(step_fn, donate: Optional[bool] = None):
+    """Run the shard_map'd MD step through the shared segment engine.
+
+    ``step_fn`` is the ``(params, SlabState) -> (SlabState, thermo)`` step
+    from :func:`make_distributed_md_step`. The returned callable
+    ``run(state, params, n_steps)`` executes ``n_steps`` steps as ONE jitted
+    ``lax.scan`` dispatch (thermo comes back stacked ``(n_steps,)``), so the
+    host touches the device once per rebuild/migration segment — the same
+    engine the single-process driver uses, keeping halo-exchange cadence
+    (per step, inside the scan) and migration cadence (per segment, outside)
+    aligned by construction.
+    """
+    from repro.md import stepper
+
+    engine = stepper.SegmentEngine(
+        lambda state, params: step_fn(params, state), donate=donate)
+
+    def run(state: SlabState, params, n_steps: int):
+        return engine.run(state, n_steps, params)
+
+    return run
+
+
+def check_segment_thermo(thermo) -> None:
+    """Per-segment overflow check over a segment's stacked thermo flags.
+
+    Replaces the seed's per-step ``int(...)`` host syncs: flags for the whole
+    segment arrive in one fetch. Capacity overflow in a capacity-bounded
+    collective drops atoms silently, so a hard error is the only safe exit —
+    escalation here means re-partitioning with larger capacities.
+    """
+    for key in ("halo_overflow", "nbr_overflow"):
+        worst = int(np.max(np.asarray(thermo[key])))
+        if worst > 0:
+            raise RuntimeError(
+                f"{key} by {worst} atoms during segment; rerun with larger "
+                f"halo/atom capacities (DomainSpec) — capacity-bounded "
+                f"exchanges drop atoms past capacity")
+
+
 # ------------------------------------------------------------------ migration
 
 def make_migration_step(spec: DomainSpec, mesh: Mesh,
@@ -447,12 +503,14 @@ def make_migration_step(spec: DomainSpec, mesh: Mesh,
             (idx_s == n - 1) & irval & (irp[:, 0] < 0),
             irp[:, 0] + box_x, irp[:, 0]))
 
-        # compact stayers, then append arrivals
+        # compact stayers, then append arrivals; ZERO invalidated slots —
+        # a stale copy of a departed atom would otherwise coincide exactly
+        # with its live ghost (NaN force gradients at r = 0).
         order = jnp.argsort(jnp.where(stay, 0, 1), stable=True)
-        pos_c = pos[order]
-        vel_c = vel[order]
-        typ_c = typ[order]
         mask_c = stay[order]
+        pos_c = jnp.where(mask_c[:, None], pos[order], 0.0)
+        vel_c = jnp.where(mask_c[:, None], vel[order], 0.0)
+        typ_c = jnp.where(mask_c, typ[order], 0)
         n_stay = jnp.sum(stay)
         arr_pos = jnp.concatenate([ilp, irp], 0)
         arr_vel = jnp.concatenate([ilv, irv], 0)

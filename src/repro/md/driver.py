@@ -3,11 +3,27 @@
 Velocity-Verlet NVE, Maxwell-Boltzmann init at 330 K, neighbor list with a
 2 A buffer rebuilt every 50 steps, thermo (KE/PE/T) recorded every 50 steps.
 99 steps => energy and forces evaluated 100 times.
+
+Two stepping engines share this entry point:
+
+  engine="scan"   (default) the fused on-device segment engine
+                  (``md/stepper.py``): one jitted ``lax.scan`` per rebuild
+                  segment, donated state buffers, thermo fetched once per
+                  segment, overflow checked at segment boundaries with
+                  capacity-escalation retry.
+  engine="python" the seed per-step Python loop, kept as the trajectory
+                  reference and the benchmark baseline
+                  (``benchmarks/md_step_time.py``).
+
+The engines agree on the physics: within the skin buffer every pair inside
+rcut is in both lists and pairs beyond rcut contribute exactly zero, so the
+only divergence is floating-point summation order.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any, Dict, List, Optional
 
@@ -17,7 +33,7 @@ import numpy as np
 
 from repro.core import dp_model
 from repro.core.types import DPConfig
-from repro.md import integrator, lattice, neighbors
+from repro.md import integrator, lattice, neighbors, stepper
 
 
 @dataclasses.dataclass
@@ -28,45 +44,115 @@ class MDResult:
     wall_s: float
     steps: int
     n_atoms: int
+    engine: str = "scan"
+    escalations: int = 0          # neighbor capacity escalations taken
 
     @property
     def us_per_step_atom(self) -> float:
         return self.wall_s * 1e6 / (self.steps * self.n_atoms)
 
 
+@functools.lru_cache(maxsize=None)
+def _kick_drift_jit():
+    """Seed loop's jitted first half-step (module-level so the compile is
+    cached across ``run_md`` calls — steady-state benchmark fairness)."""
+
+    @jax.jit
+    def kick_drift(pos, vel, f, masses, dt, box):
+        vel = integrator.verlet_half_kick(vel, f, masses, dt)
+        pos = integrator.verlet_drift(pos, vel, dt, box)
+        return pos, vel
+
+    return kick_drift
+
+
 def run_md(cfg: DPConfig, params: Any, pos: np.ndarray, typ: np.ndarray,
            box: np.ndarray, *, steps: int = 99, dt_fs: float = 1.0,
            temp_k: float = 330.0, rebuild_every: int = 50,
            thermo_every: int = 50, skin: float = 2.0,
-           impl: Optional[str] = None, seed: int = 0) -> MDResult:
+           impl: Optional[str] = None, seed: int = 0,
+           engine: str = "scan",
+           escalation: Optional[stepper.EscalationPolicy] = None) -> MDResult:
+    if engine not in ("scan", "python"):
+        raise ValueError(f"unknown engine {engine!r}")
     n = len(pos)
     masses = jnp.asarray(lattice.masses_for(cfg.type_map, np.asarray(typ)))
     spec = neighbors.NeighborSpec(rcut_nbr=cfg.rcut + skin, sel=cfg.sel)
-    nbr_fn = neighbors.make_cell_list_fn(spec, np.asarray(box, float))
+    box_np = np.asarray(box, float)
 
     pos = jnp.asarray(pos, jnp.float32)
     typ = jnp.asarray(typ, jnp.int32)
     boxj = jnp.asarray(box, jnp.float32)
     vel = integrator.init_velocities(jax.random.PRNGKey(seed), masses, temp_k)
 
+    if engine == "python":
+        return _run_md_python(cfg, params, pos, vel, typ, boxj, box_np,
+                              masses, spec, steps=steps, dt_fs=dt_fs,
+                              rebuild_every=rebuild_every,
+                              thermo_every=thermo_every, impl=impl)
+
+    # ---------------------------------------------- fused scan-segment path
+    build = stepper.build_neighbors_escalating(
+        cfg, spec, box_np, pos, typ, escalation)
+    escalations = build.escalations
+    _, f, _ = dp_model.dp_energy_forces(
+        params, build.cfg_run, pos, build.nlist, typ, boxj, impl=impl,
+        nsel_norm=cfg.nsel)
+    eng = stepper.vv_segment_engine(build.cfg_run, impl, cfg.nsel)
+    carry = stepper.VVCarry(pos, vel, f)
+
+    thermo: List[Dict[str, float]] = []
+    t0 = time.time()
+    step_base = 0
+    for seg_len in stepper.segment_schedule(steps, rebuild_every):
+        if step_base > 0:
+            # segment boundary: rebuild the list at current positions; the
+            # overflow check + escalation retry lives inside (one host sync
+            # per segment, not per step).
+            build = stepper.build_neighbors_escalating(
+                cfg, build.spec, box_np, carry.pos, typ, escalation)
+            if build.escalations:
+                escalations += build.escalations
+                eng = stepper.vv_segment_engine(build.cfg_run, impl, cfg.nsel)
+        carry, th = eng.run(carry, seg_len, params, build.nlist, typ, boxj,
+                            masses, dt_fs)
+        # ONE device->host sync per segment fetches the stacked thermo.
+        thermo.extend(stepper.thermo_rows(
+            np.asarray(th["pe"]), np.asarray(th["ke"]), step_base, steps,
+            thermo_every, n))
+        step_base += seg_len
+    carry.pos.block_until_ready()
+    wall = time.time() - t0
+    return MDResult(thermo=thermo, final_pos=np.asarray(carry.pos),
+                    final_vel=np.asarray(carry.vel), wall_s=wall,
+                    steps=steps, n_atoms=n, engine="scan",
+                    escalations=escalations)
+
+
+def _run_md_python(cfg, params, pos, vel, typ, boxj, box_np, masses, spec, *,
+                   steps, dt_fs, rebuild_every, thermo_every, impl):
+    """The seed per-step loop (reference / baseline).
+
+    Kept semantically identical to the seed except the per-rebuild
+    ``assert int(ovf)`` — a blocking device->host sync inside the hot loop —
+    is deferred: flags stay on device and are checked once after the run.
+    """
+    nbr_fn = neighbors.make_cell_list_fn(spec, box_np)
+    kick_drift = _kick_drift_jit()
+
     nlist, ovf = nbr_fn(pos, typ)
     assert int(ovf) <= 0, f"neighbor overflow {int(ovf)} at init"
     e, f, w = dp_model.dp_energy_forces(params, cfg, pos, nlist, typ, boxj,
                                         impl=impl)
 
-    @jax.jit
-    def vv_step(pos, vel, f, nlist):
-        vel = integrator.verlet_half_kick(vel, f, masses, dt_fs)
-        pos = integrator.verlet_drift(pos, vel, dt_fs, boxj)
-        return pos, vel
-
     thermo: List[Dict[str, float]] = []
+    ovf_flags = []
     t0 = time.time()
     for step in range(steps):
-        pos, vel = vv_step(pos, vel, f, nlist)
+        pos, vel = kick_drift(pos, vel, f, masses, dt_fs, boxj)
         if (step + 1) % rebuild_every == 0:
             nlist, ovf = nbr_fn(pos, typ)
-            assert int(ovf) <= 0, f"neighbor overflow at step {step}"
+            ovf_flags.append(ovf)           # device scalar; no sync here
         e, f_new, w = dp_model.dp_energy_forces(params, cfg, pos, nlist, typ,
                                                 boxj, impl=impl)
         vel = integrator.verlet_half_kick(vel, f_new, masses, dt_fs)
@@ -78,7 +164,11 @@ def run_md(cfg: DPConfig, params: Any, pos: np.ndarray, typ: np.ndarray,
                 "etot": float(e) + ke,
                 "temp": float(integrator.temperature(vel, masses)),
             })
+    pos.block_until_ready()
     wall = time.time() - t0
+    if ovf_flags:
+        worst = int(jnp.max(jnp.stack(ovf_flags)))
+        assert worst <= 0, f"neighbor overflow {worst} during run"
     return MDResult(thermo=thermo, final_pos=np.asarray(pos),
                     final_vel=np.asarray(vel), wall_s=wall, steps=steps,
-                    n_atoms=n)
+                    n_atoms=pos.shape[0], engine="python")

@@ -122,7 +122,13 @@ def make_cell_list_fn(spec: NeighborSpec, box: np.ndarray):
         sorted_cells = cflat[order]
         starts = jnp.searchsorted(sorted_cells, jnp.arange(ncells + 1))
         rank = jnp.arange(n) - starts[sorted_cells]
-        cell_overflow = jnp.max(rank) - (cap - 1)
+        if amask is not None:
+            # parked atoms share bin ncells; exclude their ranks (sorted
+            # order!) from the capacity check or they false-trigger it.
+            cell_overflow = jnp.max(
+                jnp.where((amask > 0)[order], rank, 0)) - (cap - 1)
+        else:
+            cell_overflow = jnp.max(rank) - (cap - 1)
         # Out-of-capacity or parked atoms drop (mode="drop").
         table = jnp.full((ncells + 1, cap), -1, jnp.int32)
         table = table.at[sorted_cells, rank].set(

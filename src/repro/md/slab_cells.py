@@ -10,7 +10,6 @@ parity; the brute-force O(N^2) variant is for tests only).
 
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import numpy as np
@@ -72,7 +71,10 @@ def make_slab_neighbor_fn(cfg: DPConfig, box: Tuple[float, float, float],
         # row ncells: parked invalid atoms; row ncells+1: ALWAYS EMPTY —
         # the dump target for out-of-range stencil cells (distinct rows, or
         # padding atoms would leak back in as candidates).
-        cell_ovf = jnp.max(jnp.where(mask_all, rank, 0)) - (cell_capacity - 1)
+        # rank is in SORTED atom order — align the validity mask before
+        # reducing, or parked atoms' ranks (bin ncells) leak into the max.
+        cell_ovf = jnp.max(jnp.where(mask_all[order], rank, 0)) \
+            - (cell_capacity - 1)
         table = jnp.full((ncells + 2, cell_capacity), -1, jnp.int32)
         table = table.at[sorted_cells, rank].set(order.astype(jnp.int32),
                                                  mode="drop")
@@ -92,6 +94,12 @@ def make_slab_neighbor_fn(cfg: DPConfig, box: Tuple[float, float, float],
         cand = jnp.where(cand == self_idx, -1, cand)
 
         center_pos = jax.lax.dynamic_slice_in_dim(pos_all, start, n_centers, 0)
+        # Gate by CENTER validity too (as the brute-force reference does):
+        # an invalidated slot can hold a stale copy of a migrated atom whose
+        # live ghost sits at the SAME coordinates — a d2 == 0 "pair" whose
+        # norm has a NaN gradient that survives the energy mask (0 * nan).
+        center_mask = jax.lax.dynamic_slice_in_dim(mask_all, start,
+                                                   n_centers, 0)
         rij = pos_all[cand.clip(0)] - center_pos[:, None, :]
         rij = rij - boxj * jnp.round(rij / boxj)
         d2 = jnp.where(cand >= 0, jnp.sum(rij * rij, -1), jnp.inf)
@@ -100,7 +108,8 @@ def make_slab_neighbor_fn(cfg: DPConfig, box: Tuple[float, float, float],
         sections = []
         sec_ovf = jnp.zeros((), jnp.int32)
         for t, cap_t in enumerate(cfg.sel):
-            vt = (cand >= 0) & (d2 < rc2) & (ctype == t)
+            vt = (cand >= 0) & (d2 < rc2) & (ctype == t) \
+                & center_mask[:, None]
             order_t = jnp.argsort(jnp.where(vt, 0, 1), axis=1, stable=True)
             packed = jnp.take_along_axis(cand, order_t, axis=1)
             pvalid = jnp.take_along_axis(vt, order_t, axis=1)

@@ -1,0 +1,214 @@
+"""Fused on-device MD stepping engine: ``lax.scan`` over rebuild segments.
+
+The seed driver dispatched every Velocity-Verlet step from Python and synced
+device->host for thermo/overflow each step — per-step launch overhead and
+pipeline bubbles that cap throughput far below the hardware (the paper's
+headline numbers come precisely from eliminating per-step overheads, Sec. 3.4;
+the follow-up work fuses whole step sequences). This module keeps the inner
+loop resident on the accelerator:
+
+  * one jitted ``lax.scan`` over the ``rebuild_every``-step segment between
+    neighbor-list rebuilds, with the (pos, vel, force) carry donated so XLA
+    reuses the state buffers in place;
+  * thermo (PE/KE) accumulated on device into fixed-size ``(seg_len,)``
+    arrays — ONE device->host sync per segment instead of per step;
+  * neighbor overflow flags checked once per segment boundary, with a
+    capacity-escalation retry (the fault-tolerance policy for density
+    fluctuations): capacities grow geometrically and the list is rebuilt
+    from the same — still valid — positions. The descriptor normalization
+    is pinned to the model's native ``cfg.nsel`` via ``nsel_norm`` so
+    escalated capacities change padding, never physics.
+
+Both the single-process driver (``md/driver.py``) and the distributed slab
+driver (``md/domain.py`` + ``launch/md_run.py``) run their inner loops
+through :class:`SegmentEngine`, so halo-exchange/migration cadence aligns
+with segment boundaries by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import dp_model
+from repro.core.types import DPConfig
+from repro.md import integrator, neighbors
+
+
+def default_donate() -> bool:
+    """Donation saves the carry copy on gpu/tpu; the cpu backend only warns."""
+    return jax.default_backend() != "cpu"
+
+
+def segment_schedule(steps: int, rebuild_every: int) -> List[int]:
+    """Split ``steps`` into scan-segment lengths at neighbor-rebuild cadence.
+
+    Full ``rebuild_every``-length segments followed by one trailing partial
+    segment; rebuild (and, distributed, migration) happens between entries.
+    """
+    if steps < 0 or rebuild_every <= 0:
+        raise ValueError(f"bad schedule: steps={steps} rebuild={rebuild_every}")
+    sched = [rebuild_every] * (steps // rebuild_every)
+    if steps % rebuild_every:
+        sched.append(steps % rebuild_every)
+    return sched
+
+
+def scan_segment(step_fn: Callable, carry: Any, n_steps: int, *aux: Any):
+    """``lax.scan`` of ``step_fn(carry, *aux) -> (carry, per_step_out)``.
+
+    The shared inner loop of both drivers — call inside a jit context; the
+    per-step outputs come back stacked with a leading ``(n_steps,)`` dim.
+    """
+
+    def body(c, _):
+        return step_fn(c, *aux)
+
+    return jax.lax.scan(body, carry, None, length=n_steps)
+
+
+class SegmentEngine:
+    """One jitted dispatch per segment, carry buffers donated.
+
+    ``step_fn(carry, *aux) -> (carry, per_step_out)`` is scanned for
+    ``n_steps``; jits are cached per segment length (a run has at most two:
+    the full segment and the trailing partial one).
+    """
+
+    def __init__(self, step_fn: Callable, donate: Optional[bool] = None):
+        self._step_fn = step_fn
+        self._donate = default_donate() if donate is None else donate
+        self._jits: Dict[int, Any] = {}
+
+    def run(self, carry: Any, n_steps: int, *aux: Any):
+        fn = self._jits.get(n_steps)
+        if fn is None:
+            seg = functools.partial(scan_segment, self._step_fn)
+
+            def run_n(carry, *aux, _seg=seg, _n=n_steps):
+                return _seg(carry, _n, *aux)
+
+            fn = jax.jit(run_n, donate_argnums=(0,) if self._donate else ())
+            self._jits[n_steps] = fn
+        return fn(carry, *aux)
+
+
+# ------------------------------------------------- capacity escalation policy
+
+@dataclasses.dataclass(frozen=True)
+class EscalationPolicy:
+    """Geometric capacity growth on neighbor overflow (checked per segment)."""
+    growth: float = 1.6
+    max_attempts: int = 6
+    round_to: int = 8
+
+    def grow(self, n: int) -> int:
+        n_new = max(int(n * self.growth), n + 1)
+        return -(-n_new // self.round_to) * self.round_to
+
+
+class NeighborBuild(NamedTuple):
+    nlist: jax.Array
+    cfg_run: DPConfig             # cfg with sel matching the nlist layout
+    spec: neighbors.NeighborSpec  # possibly escalated
+    escalations: int
+
+
+@functools.lru_cache(maxsize=None)
+def _cell_list_fn(spec: neighbors.NeighborSpec,
+                  box_key: Tuple[float, ...]):
+    """Cached jitted neighbor fn per (spec, box) — rebuilds reuse the jit."""
+    return neighbors.make_cell_list_fn(spec, np.asarray(box_key, float))
+
+
+def build_neighbors_escalating(
+    cfg: DPConfig, spec: neighbors.NeighborSpec, box: np.ndarray,
+    pos: jax.Array, typ: jax.Array,
+    policy: Optional[EscalationPolicy] = None,
+) -> NeighborBuild:
+    """Build the neighbor list; on overflow escalate capacities and retry.
+
+    This is the ONE host sync per segment: the overflow flag of the fresh
+    list decides escalation. Escalation grows every type-section capacity
+    and the cell-bin capacity, then rebuilds from the same positions — the
+    positions are valid, only the static capacities were too small. The
+    returned ``cfg_run`` carries the escalated ``sel`` so the model sees the
+    matching slot layout; callers must evaluate it with
+    ``nsel_norm=cfg.nsel`` to keep the trained descriptor normalization.
+    """
+    policy = policy or EscalationPolicy()
+    box_key = tuple(float(b) for b in np.asarray(box).reshape(-1))
+    escalations = 0
+    for _ in range(policy.max_attempts):
+        nlist, ovf = _cell_list_fn(spec, box_key)(pos, typ)
+        if int(ovf) <= 0:
+            cfg_run = (cfg if tuple(spec.sel) == tuple(cfg.sel)
+                       else dataclasses.replace(cfg, sel=tuple(spec.sel)))
+            return NeighborBuild(nlist, cfg_run, spec, escalations)
+        spec = dataclasses.replace(
+            spec,
+            sel=tuple(policy.grow(s) for s in spec.sel),
+            cell_capacity=policy.grow(spec.cell_capacity))
+        escalations += 1
+    raise RuntimeError(
+        f"neighbor capacity overflow persists after {policy.max_attempts} "
+        f"escalations (last spec: sel={spec.sel}, "
+        f"cell_capacity={spec.cell_capacity})")
+
+
+# ------------------------------------------- single-process Verlet segment fn
+
+class VVCarry(NamedTuple):
+    """Donated scan carry of the single-process Velocity-Verlet segment."""
+    pos: jax.Array     # (N, 3) A
+    vel: jax.Array     # (N, 3) A/fs
+    force: jax.Array   # (N, 3) eV/A
+
+
+@functools.lru_cache(maxsize=None)
+def vv_segment_engine(cfg_run: DPConfig, impl: Optional[str],
+                      nsel_norm: Optional[int],
+                      donate: Optional[bool] = None) -> SegmentEngine:
+    """Engine whose step is one full kick-drift-(force)-kick Verlet step.
+
+    Cached per (cfg_run, impl, nsel_norm) so repeated ``run_md`` calls —
+    and capacity-escalation retries — reuse compiled segments. Everything
+    array-valued (params, nlist, box, masses, dt) is a traced aux arg.
+    """
+
+    def vv_step(carry: VVCarry, params, nlist, typ, box, masses, dt):
+        pos, vel, f = carry
+        vel = integrator.verlet_half_kick(vel, f, masses, dt)
+        pos = integrator.verlet_drift(pos, vel, dt, box)
+        e, f_new, _ = dp_model.dp_energy_forces(
+            params, cfg_run, pos, nlist, typ, box, impl=impl,
+            nsel_norm=nsel_norm)
+        vel = integrator.verlet_half_kick(vel, f_new, masses, dt)
+        ke = integrator.kinetic_energy(vel, masses)
+        return VVCarry(pos, vel, f_new), {"pe": e, "ke": ke}
+
+    return SegmentEngine(vv_step, donate=donate)
+
+
+def thermo_rows(pe: np.ndarray, ke: np.ndarray, step_base: int, steps: int,
+                thermo_every: int, n_atoms: int) -> List[Dict[str, float]]:
+    """Host-side selection of thermo rows from a segment's stacked PE/KE.
+
+    Matches the seed cadence: every ``thermo_every`` global steps plus the
+    final step. Temperature follows from KE and 3N degrees of freedom.
+    """
+    rows = []
+    ndof = 3.0 * max(n_atoms, 1)
+    for i in range(len(pe)):
+        gstep = step_base + i + 1
+        if gstep % thermo_every == 0 or gstep == steps:
+            rows.append({
+                "step": gstep, "pe": float(pe[i]), "ke": float(ke[i]),
+                "etot": float(pe[i]) + float(ke[i]),
+                "temp": 2.0 * float(ke[i]) / (ndof * integrator.KB_EV),
+            })
+    return rows

@@ -9,8 +9,7 @@ dp_fused kernel's VMEM accumulator.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,6 @@ token axis's `data` sharding never forces a cross-device sort.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Tuple
 
 import jax

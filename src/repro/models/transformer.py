@@ -11,7 +11,6 @@ requirement for lowering 80-layer models in the dry-run.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -8,9 +8,8 @@ families with O(1) state ignore max_len.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
-import jax
 import jax.numpy as jnp
 
 from repro.models import encdec, griffin, transformer, xlstm

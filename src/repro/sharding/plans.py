@@ -23,12 +23,11 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Optional, Sequence, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.lm_types import LMConfig
 
 _STACK_MARKERS = ("blocks", "periods", "enc", "dec", "tail")
 

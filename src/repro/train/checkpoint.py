@@ -24,7 +24,7 @@ import os
 import re
 import shutil
 import threading
-from typing import Any, Callable, List, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import ml_dtypes

@@ -15,7 +15,7 @@ with prefactors interpolating (start -> limit) as the LR decays.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Iterator, NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,142 @@
+"""Deterministic stand-in for the slice of the hypothesis API this suite uses.
+
+Installed by ``conftest.py`` ONLY when the real ``hypothesis`` package is not
+importable (minimal containers without the ``dev`` extra), so the four
+property-based test modules degrade to seeded example sweeps instead of
+dying at collection with ``ModuleNotFoundError``. CI installs the real thing
+via ``pip install -e ".[dev]"`` and this module stays dormant.
+
+Supported: ``@given(**kwargs)``, ``@settings(max_examples=, deadline=)``,
+``st.integers / floats / booleans / sampled_from / lists / data`` and
+``assume``. Draws are seeded per example index — runs are reproducible.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+
+import numpy as np
+
+
+class _Unsatisfied(Exception):
+    """Raised by ``assume(False)``; the example is skipped."""
+
+
+class Strategy:
+    def __init__(self, draw_fn):
+        self._draw_fn = draw_fn
+
+    def draw(self, rng):
+        return self._draw_fn(rng)
+
+
+def integers(min_value=0, max_value=(1 << 30)):
+    return Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    return Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans():
+    return Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(elements):
+    seq = list(elements)
+    return Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+
+def lists(elements, min_size=0, max_size=None):
+    def draw(rng):
+        hi = (min_size + 8) if max_size is None else max_size
+        k = int(rng.integers(min_size, hi + 1))
+        return [elements.draw(rng) for _ in range(k)]
+
+    return Strategy(draw)
+
+
+class _DataStrategy:
+    """Marker returned by ``st.data()``."""
+
+
+def data():
+    return _DataStrategy()
+
+
+class DataObject:
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        return strategy.draw(self._rng)
+
+
+def assume(condition):
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+def settings(max_examples=20, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    if arg_strategies:
+        raise NotImplementedError(
+            "hypothesis stub supports keyword strategies only")
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", 20)
+            ran = 0
+            for example in range(n):
+                rng = np.random.default_rng(0xC0FFEE + 7919 * example)
+                drawn = {
+                    name: (DataObject(rng) if isinstance(s, _DataStrategy)
+                           else s.draw(rng))
+                    for name, s in kw_strategies.items()
+                }
+                try:
+                    fn(*args, **drawn, **kwargs)
+                    ran += 1
+                except _Unsatisfied:
+                    continue
+            assert ran > 0, "stub @given: every example was assume()-skipped"
+
+        # Hide the generated parameters from pytest's fixture resolution.
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for p in sig.parameters.values()
+            if p.name not in kw_strategies])
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register stub ``hypothesis`` / ``hypothesis.strategies`` modules."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = types.SimpleNamespace(
+        too_slow="too_slow", data_too_large="data_too_large",
+        filter_too_much="filter_too_much")
+    hyp.__stub__ = True
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "lists",
+                 "data"):
+        setattr(st, name, globals()[name])
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -1,10 +1,26 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests see 1 device;
 only tests/distributed/* scripts (run via subprocess) force 8 host devices.
+
+When the real ``hypothesis`` package is missing (containers without the
+``dev`` extra), a deterministic stub is installed so the property-based
+modules degrade to seeded example sweeps instead of collection errors.
 """
 
+import importlib.util
+import os
+
 import jax
-import numpy as np
 import pytest
+
+try:
+    import hypothesis  # noqa: F401  (preferred whenever installed)
+except ModuleNotFoundError:
+    _spec = importlib.util.spec_from_file_location(
+        "_hypothesis_stub",
+        os.path.join(os.path.dirname(__file__), "_hypothesis_stub.py"))
+    _stub = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_stub)
+    _stub.install()
 
 from repro.core import DPConfig, init_dp_params
 

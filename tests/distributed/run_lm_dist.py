@@ -9,7 +9,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import tempfile
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 

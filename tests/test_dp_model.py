@@ -1,10 +1,8 @@
 """DP model behaviour: implementation-ladder equivalence, symmetry
 invariances, and the paper's Fig. 2 tabulation-accuracy ladder."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import dp_model, descriptor
 from repro.md import lattice, neighbors

@@ -1,6 +1,5 @@
 """HLO cost model: trip counts, dot FLOPs, fusion bytes, collective split."""
 
-import numpy as np
 
 from repro.analysis import hlo_cost, roofline
 

@@ -1,7 +1,6 @@
 """dp_fused Pallas kernel: shape/dtype sweeps + grads vs the ref.py oracle,
 including hypothesis-generated ragged neighbor counts."""
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -9,7 +8,6 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import tabulation
 from repro.kernels.dp_fused import ops as fused_ops
 from repro.kernels.dp_fused import ref as fused_ref
 

@@ -1,6 +1,5 @@
 """Neighbor search: cell list == brute force (property-based), sections."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st

@@ -1,6 +1,5 @@
 """Slab cell-list vs brute force, single-process (property-based)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st

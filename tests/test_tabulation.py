@@ -25,13 +25,21 @@ def test_quintic_interpolates_nodes_exactly():
 
 
 def test_quintic_c2_continuity_at_nodes():
-    """Value/1st/2nd derivative match at interval joints by construction."""
+    """Value/1st/2nd derivative match at interval joints by construction.
+
+    The variation ACROSS the joint includes the slope term 2 eps |g'| (an
+    O(1e-3) quantity here), so compare the interpolant's jump against g's
+    own central difference: a discontinuity at the node would survive the
+    subtraction, smooth slope does not.
+    """
     g = _net()
     table = tabulation.build_quintic_table(g, 0.0, 4.0, 0.5)
     eps = 1e-3
     x = jnp.asarray([1.0 - eps, 1.0 + eps])
     v = tabulation.quintic_eval(table, x)
-    assert float(jnp.abs(v[0] - v[1]).max()) < 1e-3
+    ref = g(x)
+    jump = (v[0] - v[1]) - (ref[0] - ref[1])
+    assert float(jnp.abs(jump).max()) < 1e-4
 
 
 @settings(max_examples=10, deadline=None)

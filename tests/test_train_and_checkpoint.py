@@ -14,7 +14,7 @@ from repro.data.tokens import TokenPipeline
 from repro.models import build
 from repro.train import checkpoint, optim
 from repro.train.dp_trainer import train_dp
-from repro.train.steps import TrainState, init_train_state, make_train_step
+from repro.train.steps import init_train_state, make_train_step
 
 
 def test_adamw_matches_numpy_reference():
