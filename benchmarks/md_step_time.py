@@ -1,19 +1,32 @@
-"""MD stepping-engine benchmark: scan-segment vs seed python-loop.
+"""MD stepping-engine benchmark: python-loop vs scan-segment vs outer scan.
 
-Times the two engines of ``md/driver.py`` on the copper protocol (CPU,
-small box — where per-step dispatch overhead is the dominant tax the fused
-engine removes) and writes ``BENCH_md.json`` so CI records the perf
-trajectory per PR:
+Times the three engines of ``md/driver.py`` on the copper protocol (CPU,
+small box — where per-step dispatch and per-segment host-sync overhead are
+the dominant taxes the fused engines remove) and, optionally, the
+distributed slab driver's whole-trajectory outer program on forced host
+devices. Writes ``BENCH_md.json`` so CI records the perf trajectory per PR:
 
   PYTHONPATH=src python benchmarks/md_step_time.py [--tiny] [--out BENCH_md.json]
+  PYTHONPATH=src python benchmarks/md_step_time.py --dist-slabs 2   # + slab driver
 
-Both engines are warmed first (compiles cached at module level), then each
-run is repeated ``--reps`` times and the median us/step/atom reported.
+Engines are warmed first (compiles cached at module level), then reps are
+INTERLEAVED across engines (load spikes on shared runners tax everyone
+equally) and both median and min us/step/atom recorded; headline speedups
+use the min. The default rebuild cadence (2) keeps segment boundaries
+dense: the scan engine pays one host rebuild + overflow sync + thermo
+fetch per segment, the outer engine folds all of it into its chunked scan
+— that per-segment saving is what ``speedup_outer_over_scan`` tracks.
+
+The distributed benchmark re-executes this script in a subprocess with
+``--dist-worker`` and XLA_FLAGS forcing host devices (the parent process
+cannot re-init jax with a different device count).
 """
 
 import argparse
 import json
+import os
 import statistics
+import subprocess
 import sys
 
 import jax
@@ -33,22 +46,10 @@ def copper_cfg(tiny: bool) -> DPConfig:
                     axis_neuron=4, fit_widths=(24, 24, 24))
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--tiny", action="store_true",
-                    help="CI smoke shape: smallest box/model, fewer steps")
-    ap.add_argument("--nx", type=int, default=2, help="FCC supercell edge")
-    ap.add_argument("--steps", type=int, default=None)
-    ap.add_argument("--rebuild-every", type=int, default=50)
-    ap.add_argument("--reps", type=int, default=None)
-    ap.add_argument("--impl", default="mlp", choices=("mlp", "quintic", "cheb"))
-    ap.add_argument("--min-speedup", type=float, default=None,
-                    help="exit nonzero if scan/python speedup falls below")
-    ap.add_argument("--out", default="BENCH_md.json")
-    args = ap.parse_args(argv)
+ENGINES = ("python", "scan", "outer")
 
-    steps = args.steps or 99
-    reps = args.reps or (3 if args.tiny else 5)
+
+def bench_single_process(args, steps: int, reps: int):
     cfg = copper_cfg(args.tiny)
     params = dp_model.init_dp_params(jax.random.PRNGKey(0), cfg)
     if args.impl != "mlp":
@@ -57,32 +58,173 @@ def main(argv=None) -> int:
     pos, typ, box = lattice.fcc_copper(args.nx, args.nx, args.nx)
     kw = dict(steps=steps, dt_fs=1.0, temp_k=330.0, skin=1.0,
               rebuild_every=args.rebuild_every, thermo_every=50,
-              impl=args.impl)
+              impl=args.impl, chunk_segments=args.chunk_segments)
 
     print(f"{len(pos)} Cu atoms, {steps} steps, rebuild every "
           f"{args.rebuild_every}, impl={args.impl}, reps={reps}")
+    syncs, times = {}, {e: [] for e in ENGINES}
+    for engine in ENGINES:                                           # warm
+        syncs[engine] = driver.run_md(cfg, params, pos, typ, box,
+                                      engine=engine, **kw).host_syncs
+    # INTERLEAVED reps: background load on shared CI runners then taxes
+    # every engine equally instead of whichever ran during the spike
+    for _ in range(reps):
+        for engine in ENGINES:
+            times[engine].append(driver.run_md(
+                cfg, params, pos, typ, box, engine=engine,
+                **kw).us_per_step_atom)
     results = {}
-    for engine in ("python", "scan"):
-        driver.run_md(cfg, params, pos, typ, box, engine=engine, **kw)  # warm
-        times = [driver.run_md(cfg, params, pos, typ, box, engine=engine,
-                               **kw).us_per_step_atom for _ in range(reps)]
+    for engine in ENGINES:
         results[engine] = {
-            "us_per_step_atom_median": statistics.median(times),
-            "us_per_step_atom_min": min(times),
-            "us_per_step_atom_all": times,
+            "us_per_step_atom_median": statistics.median(times[engine]),
+            "us_per_step_atom_min": min(times[engine]),
+            "us_per_step_atom_all": times[engine],
+            "host_syncs": syncs[engine],
         }
         print(f"  engine={engine:7s} median "
               f"{results[engine]['us_per_step_atom_median']:8.2f} "
-              f"us/step/atom  (min {min(times):.2f})")
+              f"us/step/atom  (min {min(times[engine]):.2f}, "
+              f"host_syncs {syncs[engine]})")
+    return results, len(pos)
 
-    speedup = (results["python"]["us_per_step_atom_median"]
-               / results["scan"]["us_per_step_atom_median"])
+
+def bench_distributed_worker(args, steps: int, reps: int) -> int:
+    """Runs INSIDE the forced-device subprocess: time the slab driver's
+    whole-trajectory outer program (migration + rebuild in the scan)."""
+    import time
+
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.md import domain, integrator, stepper
+
+    n_slabs = args.dist_slabs
+    # always the full config: the tiny sel=(32,) cannot hold the 4.5 A
+    # copper neighborhood (~42 neighbors) and DomainSpec has no escalation
+    # path — overflow is a hard error by design
+    cfg = copper_cfg(False)
+    params = dp_model.init_dp_params(jax.random.PRNGKey(0), cfg)
+    # >= 3 cells along x per slab and y/z >= 2*rcut_halo for min-image
+    pos, typ, box = lattice.fcc_copper(3 * n_slabs, 3, 3)
+    n = len(pos)
+    mesh = jax.make_mesh((n_slabs, 1), ("data", "model"))
+    cap = int(n / n_slabs * 1.5) + 8
+    # skin 0.5: sel=(48,) holds the 4.5 A copper neighborhood with margin;
+    # a 1.0 skin overflows it at 330 K (DomainSpec has no escalation path —
+    # overflow is a hard error by design)
+    spec = domain.DomainSpec(box=tuple(box), n_slabs=n_slabs,
+                             atom_capacity=cap, halo_capacity=cap,
+                             rcut_halo=cfg.rcut + 0.5)
+    spec.validate()
+    masses = jnp.full((n,), 63.546)
+    vel = integrator.init_velocities(jax.random.PRNGKey(1), masses, 330.0)
+    state0, ovf = domain.partition_atoms(
+        pos.astype(np.float32), np.asarray(vel, np.float32), typ, spec)
+    assert ovf <= 0
+    sh = NamedSharding(mesh, P("data"))
+    state0 = jax.tree.map(lambda x: jax.device_put(x, sh), state0)
+    params_r = jax.tree.map(
+        lambda x: jax.device_put(x, NamedSharding(mesh, P())), params)
+    program = domain.make_outer_md_program(
+        cfg, spec, mesh, (63.546,), 1.0, decomp="atoms", neighbor="cells",
+        donate=False)
+    sched = stepper.chunk_schedule(steps, args.rebuild_every, 8)
+
+    def one_run():
+        state = state0
+        t0 = time.time()
+        for n_segs, seg_len in sched:
+            state, thermo = program.run(state, params_r, n_segs, seg_len)
+            domain.check_segment_thermo(thermo)
+        jax.block_until_ready(state)
+        return (time.time() - t0) * 1e6 / (steps * n)
+
+    one_run()                                                        # warm
+    times = [one_run() for _ in range(reps)]
+    print(json.dumps({
+        "slabs": n_slabs, "n_atoms": n, "devices": len(jax.devices()),
+        "engine": "outer_distributed",
+        "us_per_step_atom_median": statistics.median(times),
+        "us_per_step_atom_min": min(times),
+        "us_per_step_atom_all": times,
+    }))
+    return 0
+
+
+def bench_distributed(args, steps: int, reps: int):
+    """Spawn the forced-device worker subprocess and parse its JSON line."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count="
+                        f"{args.dist_slabs}").strip()
+    cmd = [sys.executable, os.path.abspath(__file__), "--dist-worker",
+           "--dist-slabs", str(args.dist_slabs),
+           "--rebuild-every", str(args.rebuild_every),
+           "--steps", str(steps), "--reps", str(reps)]
+    # (no --tiny forwarding: the worker always runs the full config — the
+    # tiny sel cannot hold the copper neighborhood, see the worker)
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=1200,
+                       env=env)
+    if r.returncode != 0:
+        print(f"  distributed bench FAILED:\n{r.stdout}\n{r.stderr}")
+        return {"status": "failed", "error": r.stderr[-500:]}
+    row = json.loads(r.stdout.strip().splitlines()[-1])
+    print(f"  engine=outer_distributed ({row['slabs']} slabs, "
+          f"{row['n_atoms']} atoms) median "
+          f"{row['us_per_step_atom_median']:8.2f} us/step/atom "
+          f"(min {row['us_per_step_atom_min']:.2f})")
+    return row
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke shape: smallest box/model, fewer steps")
+    ap.add_argument("--nx", type=int, default=2, help="FCC supercell edge")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--rebuild-every", type=int, default=2,
+                    help="segment length; small by design — the benchmark "
+                         "measures segment-BOUNDARY overhead (host rebuild "
+                         "+ sync for scan, none for outer), so boundaries "
+                         "are kept dense")
+    ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--chunk-segments", type=int, default=32,
+                    help="outer engine: segments fused per dispatch")
+    ap.add_argument("--impl", default="mlp", choices=("mlp", "quintic", "cheb"))
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="exit nonzero if scan/python speedup falls below")
+    ap.add_argument("--min-outer-speedup", type=float, default=None,
+                    help="exit nonzero if outer/scan speedup falls below")
+    ap.add_argument("--dist-slabs", type=int, default=0,
+                    help="also benchmark the distributed slab driver on "
+                         "this many forced host devices (0: skip)")
+    ap.add_argument("--dist-worker", action="store_true",
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--out", default="BENCH_md.json")
+    args = ap.parse_args(argv)
+
+    steps = args.steps or 99
+    reps = args.reps or (3 if args.tiny else 5)
+    if args.dist_worker:
+        return bench_distributed_worker(args, steps, reps)
+
+    results, n_atoms = bench_single_process(args, steps, reps)
+
+    # speedups from per-engine MIN: on time-shared runners the min is the
+    # least load-polluted estimate of each engine's true cost (medians of
+    # interleaved reps still swing tens of percent under noisy neighbors)
+    speedup = (results["python"]["us_per_step_atom_min"]
+               / results["scan"]["us_per_step_atom_min"])
+    outer_speedup = (results["scan"]["us_per_step_atom_min"]
+                     / results["outer"]["us_per_step_atom_min"])
     print(f"scan-segment speedup over python-loop: {speedup:.2f}x")
+    print(f"outer-scan speedup over scan-segment:  {outer_speedup:.2f}x")
 
     payload = {
         "benchmark": "md_step_time",
         "system": f"fcc_cu_{args.nx}x{args.nx}x{args.nx}",
-        "n_atoms": len(pos),
+        "n_atoms": n_atoms,
         "steps": steps,
         "rebuild_every": args.rebuild_every,
         "impl": args.impl,
@@ -91,17 +233,31 @@ def main(argv=None) -> int:
         "jax_version": jax.__version__,
         "python_loop": results["python"],
         "scan_segment": results["scan"],
+        "outer_scan": results["outer"],
         "speedup_scan_over_python": speedup,
+        "speedup_outer_over_scan": outer_speedup,
     }
+    if args.dist_slabs:
+        payload["distributed"] = bench_distributed(args, steps, reps)
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"wrote {args.out}")
 
+    rc = 0
+    if payload.get("distributed", {}).get("status") == "failed":
+        # a broken distributed leg must fail the job, not just the artifact
+        print("FAIL: distributed benchmark worker failed")
+        rc = 1
     if args.min_speedup is not None and speedup < args.min_speedup:
-        print(f"FAIL: speedup {speedup:.2f}x < required "
+        print(f"FAIL: scan speedup {speedup:.2f}x < required "
               f"{args.min_speedup:.2f}x")
-        return 1
-    return 0
+        rc = 1
+    if (args.min_outer_speedup is not None
+            and outer_speedup < args.min_outer_speedup):
+        print(f"FAIL: outer speedup {outer_speedup:.2f}x < required "
+              f"{args.min_outer_speedup:.2f}x")
+        rc = 1
+    return rc
 
 
 if __name__ == "__main__":

@@ -4,10 +4,12 @@
 neighbor list with 2 A skin rebuilt every 50 steps, thermo every 50 —
 run with the FULL implementation ladder and timed per step. The inner loop
 runs through the fused scan-segment engine (``md/stepper.py``) by default;
+``--engine outer`` folds the neighbor rebuild into a whole-trajectory
+two-level scan (one host sync per chunk of segments) and
 ``--engine python`` reproduces the seed per-step loop for comparison:
 
   PYTHONPATH=src python examples/md_copper.py [--nx 4] [--steps 99] \
-      [--engine scan|python]
+      [--engine outer|scan|python]
 """
 
 import argparse
@@ -24,9 +26,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--nx", type=int, default=3, help="FCC supercell edge")
     ap.add_argument("--steps", type=int, default=99)
-    ap.add_argument("--engine", default="scan", choices=("scan", "python"),
-                    help="fused lax.scan segments (default) or the seed "
-                         "per-step python loop")
+    ap.add_argument("--engine", default="scan",
+                    choices=("outer", "scan", "python"),
+                    help="whole-trajectory two-level scan, fused lax.scan "
+                         "segments (default), or the seed per-step loop")
     args = ap.parse_args()
 
     # paper-shaped copper model, scaled for CPU (sel 128 vs the paper's 512)

@@ -17,6 +17,12 @@ rebuild segment (the fused on-device inner loop of ``md/stepper.py`` — the
 program production actually dispatches), then record memory_analysis (the
 paper's max-atoms-per-device story: the baseline materializes G_i, the
 fused path never does) and the roofline terms.
+
+With ``--outer-segments N`` (N > 0) the lowered program is the
+whole-trajectory two-level scan instead (``domain.make_outer_md_program``):
+N segments of (scan-safe migration + ``--segment-len`` steps) fused into a
+single dispatch — the compile proof that migration + rebuild fold into the
+scanned program at paper scale.
 """
 
 import argparse
@@ -98,12 +104,15 @@ def dp_model_flops(cfg: DPConfig, n_atoms: int, impl: str) -> float:
 
 
 def lower_md_cell(cell: MDCell, impl: str, mesh, multi_pod: bool,
-                  verbose: bool = True, segment_len: int = 4) -> Dict[str, Any]:
+                  verbose: bool = True, segment_len: int = 4,
+                  outer_segments: int = 0) -> Dict[str, Any]:
     spatial_axis = ("pod", "data") if multi_pod else "data"
     n_slabs = mesh.shape["data"] * (mesh.shape.get("pod", 1))
     n_model = mesh.shape["model"]
     mesh_name = "2x16x16" if multi_pod else "16x16"
     name = f"dpmd_{cell.name}/{impl}/{mesh_name}"
+    if outer_segments:
+        name += f"/outer{outer_segments}"
     try:
         spec, cap = geometry(cell, n_slabs, n_model)
         cfg = dataclasses.replace(cell.cfg, impl=impl)
@@ -118,14 +127,24 @@ def lower_md_cell(cell: MDCell, impl: str, mesh, multi_pod: bool,
             return p
 
         params_shapes = jax.eval_shape(make_params, key)
-        step_fn = domain.make_distributed_md_step(
-            cfg, spec, mesh, cell.masses, cell.dt_fs, impl=impl,
-            spatial_axis=spatial_axis, decomp="atoms", neighbor="cells")
+        if outer_segments:
+            # whole-trajectory program: migration + rebuild inside the scan
+            program = domain.make_outer_md_program(
+                cfg, spec, mesh, cell.masses, cell.dt_fs, impl=impl,
+                spatial_axis=spatial_axis, decomp="atoms", neighbor="cells")
+            outer_fn = program.build(outer_segments, segment_len)
 
-        def seg_fn(params, state):
-            # the production inner loop: one scan per rebuild segment
-            return stepper.scan_segment(
-                lambda st, p: step_fn(p, st), state, segment_len, params)
+            def seg_fn(params, state):
+                return outer_fn(params, state)
+        else:
+            step_fn = domain.make_distributed_md_step(
+                cfg, spec, mesh, cell.masses, cell.dt_fs, impl=impl,
+                spatial_axis=spatial_axis, decomp="atoms", neighbor="cells")
+
+            def seg_fn(params, state):
+                # the production inner loop: one scan per rebuild segment
+                return stepper.scan_segment(
+                    lambda st, p: step_fn(p, st), state, segment_len, params)
 
         sl = spec.atom_capacity
         state_shapes = domain.SlabState(
@@ -136,8 +155,10 @@ def lower_md_cell(cell: MDCell, impl: str, mesh, multi_pod: bool,
         sp = P(spatial_axis) if isinstance(spatial_axis, str) else P(spatial_axis)
         state_sh = domain.SlabState(*(NamedSharding(mesh, sp),) * 4)
         rep_tree = jax.tree.map(lambda _: NamedSharding(mesh, P()), params_shapes)
-        thermo_sh = {k: NamedSharding(mesh, P()) for k in
-                     ("pe", "ke", "n_atoms", "halo_overflow", "nbr_overflow")}
+        thermo_keys = list(domain.THERMO_KEYS)
+        if outer_segments:
+            thermo_keys.append("mig_overflow")
+        thermo_sh = {k: NamedSharding(mesh, P()) for k in thermo_keys}
 
         t0 = time.time()
         jitted = jax.jit(seg_fn, in_shardings=(rep_tree, state_sh),
@@ -149,10 +170,11 @@ def lower_md_cell(cell: MDCell, impl: str, mesh, multi_pod: bool,
 
         n_atoms_global = cap * n_slabs
         mesh_shape = tuple(mesh.shape[a] for a in mesh.axis_names)
+        steps_lowered = segment_len * max(outer_segments, 1)
         report = rl.analyze_compiled(
             name, compiled, n_chips=mesh.size,
-            model_flops=segment_len * dp_model_flops(cfg, n_atoms_global,
-                                                     impl),
+            model_flops=steps_lowered * dp_model_flops(cfg, n_atoms_global,
+                                                       impl),
             mesh_shape=mesh_shape)
         if impl == "cheb_pallas":
             # interpret=True lowers the kernel as a scanned XLA program whose
@@ -167,13 +189,13 @@ def lower_md_cell(cell: MDCell, impl: str, mesh, multi_pod: bool,
             fwd = a_chip * nm * 5 * 4 + a_chip * 4 * m * 4
             bwd = a_chip * nm * 5 * 4 + a_chip * 4 * m * 4 \
                 + a_chip * nm * 5 * 4
-            kernel_bytes = float(segment_len * (fwd + bwd))
+            kernel_bytes = float(steps_lowered * (fwd + bwd))
             # non-kernel traffic (neighbor search, env build, fitting net,
             # integration) approximated by the cheb XLA path's non-G share:
             # keep the artifact's bytes for everything outside the kernel by
             # subtracting the interpret-scan inflation (grid-step slices).
             report.hlo_bytes = kernel_bytes \
-                + segment_len * 6 * 4 * a_chip * nm            # env build
+                + steps_lowered * 6 * 4 * a_chip * nm          # env build
             report.t_memory = report.hlo_bytes / report.hw.hbm_bw
             # Redundancy removal (paper Sec. 3.4.2): the kernel's pl.when
             # skips neighbor tiles past each atom tile's real count; the
@@ -221,6 +243,10 @@ def main(argv=None) -> int:
                     default="pod")
     ap.add_argument("--segment-len", type=int, default=4,
                     help="MD steps fused into the lowered scan segment")
+    ap.add_argument("--outer-segments", type=int, default=0,
+                    help="if > 0, lower the whole-trajectory two-level scan "
+                         "(this many segments of migration + segment-len "
+                         "steps) instead of a single inner segment")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 
@@ -239,7 +265,8 @@ def main(argv=None) -> int:
         for s in systems:
             for impl in impls:
                 row = lower_md_cell(cells[s], impl, mesh, multi,
-                                    segment_len=args.segment_len)
+                                    segment_len=args.segment_len,
+                                    outer_segments=args.outer_segments)
                 rows.append(row)
                 fails += row["status"] == "failed"
     if args.out:

@@ -4,10 +4,16 @@
       --nx 8 --steps 99
 
 Uses the shard_map'd slab-decomposition step (halo exchange + reverse force
-comm + model-axis decomposition), scanned on device in rebuild-length
-segments by the shared engine (``md/stepper.py``) with migration at segment
-boundaries; on a single device it degenerates to 1 slab x 1 shard of the
-same program.
+comm + model-axis decomposition). Two engines:
+
+  --engine outer  (default) the whole-trajectory program: migration +
+                  rebuild folded INTO one two-level lax.scan; one dispatch
+                  and one host sync (thermo + overflow flags) per chunk of
+                  segments.
+  --engine scan   one scan dispatch per rebuild segment, migration at
+                  segment boundaries from the host loop.
+
+On a single device both degenerate to 1 slab x 1 shard of the same program.
 """
 
 import argparse
@@ -34,6 +40,9 @@ def main(argv=None):
     ap.add_argument("--dt", type=float, default=1.0)
     ap.add_argument("--temp", type=float, default=330.0)
     ap.add_argument("--rebuild-every", type=int, default=20)
+    ap.add_argument("--engine", default="outer", choices=("outer", "scan"))
+    ap.add_argument("--chunk-segments", type=int, default=8,
+                    help="outer engine: rebuild segments fused per dispatch")
     ap.add_argument("--impl", default="mlp",
                     choices=("mlp", "quintic", "cheb"))
     args = ap.parse_args(argv)
@@ -88,33 +97,54 @@ def main(argv=None):
     params_r = jax.tree.map(
         lambda x: jax.device_put(x, NamedSharding(mesh, P())), params)
 
-    step = domain.make_distributed_md_step(
-        cfg, spec, mesh, (63.546,), args.dt, impl=args.impl, decomp="atoms",
-        neighbor="cells")
-    run_segment = domain.make_segment_runner(step)
-    migrate = domain.make_migration_step(spec, mesh)
-
     print(f"{n} atoms, {n_slabs} slabs x {args.model_axis} model shards "
-          f"on {n_dev} devices")
-    t0 = time.time()
-    base = 0
-    for seg_len in stepper.segment_schedule(args.steps, args.rebuild_every):
-        # one scan dispatch per segment; thermo/overflow fetched once after
-        state, thermo = run_segment(state, params_r, seg_len)
-        domain.check_segment_thermo(thermo)
-        pe = np.asarray(thermo["pe"])
-        ke = np.asarray(thermo["ke"])
-        natoms = np.asarray(thermo["n_atoms"])
-        for i in range(seg_len):
+          f"on {n_dev} devices, engine={args.engine}")
+
+    def show(pe, ke, natoms, base, count):
+        for i in range(count):
             gstep = base + i + 1
             if gstep % 33 == 0 or gstep == 1:
                 print(f"step {gstep:4d}  E_pot {pe[i]:+.4f}  "
                       f"E_tot {pe[i]+ke[i]:+.4f}  atoms {int(natoms[i])}",
                       flush=True)
-        base += seg_len
-        if seg_len == args.rebuild_every:   # full segment: migration cadence
-            state, movf = migrate(state)
-            assert int(movf) <= 0, "migration overflow"
+
+    if args.engine == "outer":
+        program = domain.make_outer_md_program(
+            cfg, spec, mesh, (63.546,), args.dt, impl=args.impl,
+            decomp="atoms", neighbor="cells")
+        t0 = time.time()
+        base = 0
+        for n_segs, seg_len in stepper.chunk_schedule(
+                args.steps, args.rebuild_every, args.chunk_segments):
+            # ONE dispatch per chunk of segments; migration + rebuild run
+            # inside the scanned program. One host fetch checks the chunk's
+            # stacked overflow flags and prints its thermo.
+            state, thermo = program.run(state, params_r, n_segs, seg_len)
+            domain.check_segment_thermo(thermo)
+            show(np.asarray(thermo["pe"]).reshape(-1),
+                 np.asarray(thermo["ke"]).reshape(-1),
+                 np.asarray(thermo["n_atoms"]).reshape(-1), base,
+                 n_segs * seg_len)
+            base += n_segs * seg_len
+    else:
+        step = domain.make_distributed_md_step(
+            cfg, spec, mesh, (63.546,), args.dt, impl=args.impl,
+            decomp="atoms", neighbor="cells")
+        run_segment = domain.make_segment_runner(step)
+        migrate = domain.make_migration_step(spec, mesh)
+        t0 = time.time()
+        base = 0
+        for seg_len in stepper.segment_schedule(args.steps,
+                                                args.rebuild_every):
+            # one scan dispatch per segment; thermo/overflow fetched after
+            state, thermo = run_segment(state, params_r, seg_len)
+            domain.check_segment_thermo(thermo)
+            show(np.asarray(thermo["pe"]), np.asarray(thermo["ke"]),
+                 np.asarray(thermo["n_atoms"]), base, seg_len)
+            base += seg_len
+            if seg_len == args.rebuild_every:  # full segment: migration
+                state, movf = migrate(state)
+                assert int(movf) <= 0, "migration overflow"
     jax.block_until_ready(state)
     dt_wall = time.time() - t0
     print(f"{dt_wall/args.steps*1e6/n:.2f} us/step/atom wall (this host)")

@@ -41,7 +41,7 @@ except ImportError:                          # jax 0.4.x
 
 from repro.core import dp_model
 from repro.core.types import DPConfig
-from repro.md import integrator
+from repro.md import integrator, neighbors
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
@@ -219,35 +219,27 @@ def _slab_neighbors(pos_all, typ_all, mask_all, cfg: DPConfig, rc2: float,
     self_mask = cand == jnp.arange(n_local, dtype=jnp.int32)[:, None]
     valid = (~self_mask) & mask_all[None, :] & mask_all[:n_local, None] \
         & (d2 < rc2)
-    sections = []
-    overflow = jnp.zeros((), jnp.int32)
-    for t, cap_t in enumerate(cfg.sel):
-        vt = valid & (typ_all[cand.clip(0)] == t)
-        order = jnp.argsort(jnp.where(vt, 0, 1), axis=1, stable=True)
-        packed = jnp.take_along_axis(cand, order, axis=1)
-        pvalid = jnp.take_along_axis(vt, order, axis=1)
-        if packed.shape[1] < cap_t:
-            packed = jnp.pad(packed, ((0, 0), (0, cap_t - packed.shape[1])),
-                             constant_values=-1)
-            pvalid = jnp.pad(pvalid, ((0, 0), (0, cap_t - pvalid.shape[1])))
-        sections.append(jnp.where(pvalid[:, :cap_t], packed[:, :cap_t], -1))
-        overflow = jnp.maximum(overflow, jnp.max(jnp.sum(vt, 1)) - cap_t)
-    return jnp.concatenate(sections, axis=1), overflow
+    return neighbors.pack_type_sections(cand, valid, typ_all[cand.clip(0)],
+                                        cfg.sel)
 
 
 # ---------------------------------------------------------------- the MD step
 
-def make_distributed_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
-                             masses: Tuple[float, ...], dt_fs: float,
-                             impl: Optional[str] = None,
-                             spatial_axis="data",
-                             model_axis: str = "model",
-                             decomp: str = "slots",
-                             neighbor: str = "brute"):
-    """Build the shard_map'd (params, SlabState) -> (SlabState, thermo) step.
+def make_local_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
+                       masses: Tuple[float, ...], dt_fs: float,
+                       impl: Optional[str] = None,
+                       spatial_axis="data",
+                       model_axis: str = "model",
+                       decomp: str = "slots",
+                       neighbor: str = "brute"):
+    """Per-shard MD step body — the code that runs INSIDE shard_map.
 
-    The returned function expects SlabState leaves stacked over slabs and
-    sharded P(spatial_axis) on dim 0; params replicated.
+    Returns ``step_local(params, pos, vel, typ, mask) ->
+    ((pos, vel, typ, mask), thermo)`` on squeezed per-slab arrays. Fully
+    traceable (halo exchange, rebuild, force, Verlet — no host branches), so
+    it embeds equally in the per-segment engine
+    (:func:`make_distributed_md_step`) and in the whole-trajectory two-level
+    scan (:func:`make_outer_md_program`).
 
     decomp:
       "slots" — model shards take complementary NEIGHBOR-SLOT slices of every
@@ -313,9 +305,7 @@ def make_distributed_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
             params, cfg_p, rij, nmask, typ_centers, impl=impl)
         return jnp.sum(e_i * mask_centers)
 
-    def step(params, state: SlabState):
-        # shard_map keeps the sharded slab dim at local size 1 — squeeze it.
-        pos, vel, typ, mask = (x[0] for x in state)
+    def step_local(params, pos, vel, typ, mask):
         cap = pos.shape[0]
         idx_s = jax.lax.axis_index(spatial_axis)
         slab_lo = idx_s.astype(jnp.float32) * spec.slab_width
@@ -396,14 +386,46 @@ def make_distributed_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
             "halo_overflow": jax.lax.pmax(h_ovf, spatial_axis),
             "nbr_overflow": jax.lax.pmax(n_ovf, spatial_axis),
         }
+        return (pos, vel, typ, mask), thermo
+
+    return step_local
+
+
+def _state_pspec(spatial_axis) -> SlabState:
+    return SlabState(pos=P(spatial_axis), vel=P(spatial_axis),
+                     typ=P(spatial_axis), mask=P(spatial_axis))
+
+
+THERMO_KEYS = ("pe", "ke", "n_atoms", "halo_overflow", "nbr_overflow")
+
+
+def make_distributed_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
+                             masses: Tuple[float, ...], dt_fs: float,
+                             impl: Optional[str] = None,
+                             spatial_axis="data",
+                             model_axis: str = "model",
+                             decomp: str = "slots",
+                             neighbor: str = "brute"):
+    """Build the shard_map'd (params, SlabState) -> (SlabState, thermo) step.
+
+    The returned function expects SlabState leaves stacked over slabs and
+    sharded P(spatial_axis) on dim 0; params replicated. See
+    :func:`make_local_md_step` for the decomp / neighbor options.
+    """
+    step_local = make_local_md_step(
+        cfg, spec, mesh, masses, dt_fs, impl=impl, spatial_axis=spatial_axis,
+        model_axis=model_axis, decomp=decomp, neighbor=neighbor)
+
+    def step(params, state: SlabState):
+        # shard_map keeps the sharded slab dim at local size 1 — squeeze it.
+        pos, vel, typ, mask = (x[0] for x in state)
+        (pos, vel, typ, mask), thermo = step_local(params, pos, vel, typ, mask)
         new_state = SlabState(pos=pos[None], vel=vel[None], typ=typ[None],
                               mask=mask[None])
         return new_state, thermo
 
-    state_spec = SlabState(pos=P(spatial_axis), vel=P(spatial_axis),
-                           typ=P(spatial_axis), mask=P(spatial_axis))
-    thermo_spec = {"pe": P(), "ke": P(), "n_atoms": P(),
-                   "halo_overflow": P(), "nbr_overflow": P()}
+    state_spec = _state_pspec(spatial_axis)
+    thermo_spec = {k: P() for k in THERMO_KEYS}
     return shard_map(step, mesh=mesh, in_specs=(P(), state_spec),
                      out_specs=(state_spec, thermo_spec),
                      check_vma=False)
@@ -442,7 +464,9 @@ def check_segment_thermo(thermo) -> None:
     collective drops atoms silently, so a hard error is the only safe exit —
     escalation here means re-partitioning with larger capacities.
     """
-    for key in ("halo_overflow", "nbr_overflow"):
+    keys = ("halo_overflow", "nbr_overflow") + \
+        (("mig_overflow",) if "mig_overflow" in thermo else ())
+    for key in keys:
         worst = int(np.max(np.asarray(thermo[key])))
         if worst > 0:
             raise RuntimeError(
@@ -452,6 +476,117 @@ def check_segment_thermo(thermo) -> None:
 
 
 # ------------------------------------------------------------------ migration
+#
+# Split into PURE pieces (split / merge — no collectives, fixed send/recv
+# slot capacities, fully static shapes) composed around a single ppermute
+# pair in _migrate_local. The pure pieces are what the invariant suite
+# drives across an emulated slab ring, and the scan-safety of the whole
+# path is what lets make_outer_md_program fold migration into the
+# two-level scanned trajectory.
+
+def split_migrants(pos, vel, typ, mask, spec: DomainSpec, slab_lo):
+    """Partition a slab into compacted stayers + fixed-capacity send packets.
+
+    Returns ``(stayers, left_pkt, right_pkt, pack_ovf)`` where ``stayers``
+    is ``(pos_c, vel_c, typ_c, mask_c, n_stay)`` (stay-compacted, stale
+    slots ZEROED — a stale copy of a departed atom would otherwise coincide
+    exactly with its live ghost: NaN force gradients at r = 0) and each
+    packet is ``(pos (hc, 3), vel, typ, valid)`` bound for that x-neighbor.
+    Send capacity is ``spec.halo_capacity`` slots per side; excess migrants
+    are reported in ``pack_ovf``, never silently dropped into the exchange.
+    """
+    hc = spec.halo_capacity
+    x = pos[:, 0] - slab_lo
+    go_left = mask & (x < 0)
+    go_right = mask & (x >= spec.slab_width)
+    stay = mask & ~go_left & ~go_right
+
+    def pack(sel):
+        order = jnp.argsort(jnp.where(sel, 0, 1), stable=True)
+        idx = order[:hc]
+        valid = sel[idx]
+        ovf = jnp.sum(sel) - jnp.sum(valid)
+        return (jnp.where(valid[:, None], pos[idx], 0.0),
+                jnp.where(valid[:, None], vel[idx], 0.0),
+                jnp.where(valid, typ[idx], 0), valid), ovf
+
+    left_pkt, l_ovf = pack(go_left)
+    right_pkt, r_ovf = pack(go_right)
+    order = jnp.argsort(jnp.where(stay, 0, 1), stable=True)
+    mask_c = stay[order]
+    pos_c = jnp.where(mask_c[:, None], pos[order], 0.0)
+    vel_c = jnp.where(mask_c[:, None], vel[order], 0.0)
+    typ_c = jnp.where(mask_c, typ[order], 0)
+    stayers = (pos_c, vel_c, typ_c, mask_c, jnp.sum(stay))
+    return stayers, left_pkt, right_pkt, jnp.maximum(l_ovf, r_ovf)
+
+
+def merge_arrivals(stayers, in_l, in_r, idx_s, spec: DomainSpec):
+    """Append arrival packets to the compacted stayers of one slab.
+
+    ``in_l`` / ``in_r`` are the packets received from the left / right
+    x-neighbor (each ``(pos, vel, typ, valid)``); ``idx_s`` is this slab's
+    ring index (traced inside shard_map, a plain int in the invariant
+    harness). Periodic wrap in x is applied to migrants that crossed the box
+    ends. Returns ``((pos, vel, typ, mask), overflow)`` with arrivals
+    placed at the first free slots; atom-capacity overflow is reported and
+    the excess arrivals dropped by ``mode="drop"`` (the flag makes the
+    chunk retry/abort — the data is never silently wrong).
+    """
+    n = spec.n_slabs
+    box_x = spec.box[0]
+    pos_c, vel_c, typ_c, mask_c, n_stay = stayers
+    cap = pos_c.shape[0]
+    # periodic wrap for migrants crossing the box ends:
+    # from slab n-1 arriving at slab 0: x ~ box_x -> x - box_x;
+    # from slab 0 arriving at slab n-1: x < 0 -> x + box_x.
+    ilp, ilv, ilt, ilval = in_l
+    irp, irv, irt, irval = in_r
+    ilp = ilp.at[:, 0].set(jnp.where(
+        (idx_s == 0) & ilval & (ilp[:, 0] >= box_x),
+        ilp[:, 0] - box_x, ilp[:, 0]))
+    irp = irp.at[:, 0].set(jnp.where(
+        (idx_s == n - 1) & irval & (irp[:, 0] < 0),
+        irp[:, 0] + box_x, irp[:, 0]))
+
+    arr_pos = jnp.concatenate([ilp, irp], 0)
+    arr_vel = jnp.concatenate([ilv, irv], 0)
+    arr_typ = jnp.concatenate([ilt, irt], 0)
+    arr_val = jnp.concatenate([ilval, irval], 0)
+    # place arrival j at slot n_stay + rank(j); invalid/overflow -> cap
+    # (out of range, dropped by mode="drop")
+    rank = jnp.cumsum(arr_val) - 1
+    slot = jnp.where(arr_val, n_stay + rank, cap).astype(jnp.int32)
+    m_ovf = jnp.maximum(jnp.max(jnp.where(arr_val, slot, 0)) - (cap - 1), 0)
+    pos_c = pos_c.at[slot].set(arr_pos, mode="drop")
+    vel_c = vel_c.at[slot].set(arr_vel, mode="drop")
+    typ_c = typ_c.at[slot].set(arr_typ, mode="drop")
+    mask_c = mask_c.at[slot].set(arr_val, mode="drop")
+    return (pos_c, vel_c, typ_c, mask_c), m_ovf
+
+
+def _migrate_local(pos, vel, typ, mask, spec: DomainSpec, spatial_axis):
+    """Per-shard migration: split -> ppermute both ways -> merge.
+
+    Fully traceable with static shapes — safe under ``lax.scan`` (the outer
+    program folds this into the scanned trajectory at segment cadence).
+    Returns squeezed ``((pos, vel, typ, mask), local_overflow)``; callers
+    pmax the flag over the spatial axis.
+    """
+    n = spec.n_slabs
+    idx_s = jax.lax.axis_index(spatial_axis)
+    slab_lo = idx_s.astype(jnp.float32) * spec.slab_width
+    stayers, left_pkt, right_pkt, pack_ovf = split_migrants(
+        pos, vel, typ, mask, spec, slab_lo)
+    rightp = [(i, (i + 1) % n) for i in range(n)]
+    leftp = [(i, (i - 1) % n) for i in range(n)]
+    in_l = jax.tree.map(lambda t: jax.lax.ppermute(t, spatial_axis, rightp),
+                        right_pkt)     # from left slab
+    in_r = jax.tree.map(lambda t: jax.lax.ppermute(t, spatial_axis, leftp),
+                        left_pkt)      # from right slab
+    merged, m_ovf = merge_arrivals(stayers, in_l, in_r, idx_s, spec)
+    return merged, jnp.maximum(pack_ovf, m_ovf)
+
 
 def make_migration_step(spec: DomainSpec, mesh: Mesh,
                         spatial_axis: str = "data"):
@@ -460,76 +595,102 @@ def make_migration_step(spec: DomainSpec, mesh: Mesh,
     Runs at neighbor-rebuild cadence. Capacity-bounded ppermute sends with
     overflow flags; periodic wrap in x is applied to the migrated copies.
     """
-    n = spec.n_slabs
-    box_x = spec.box[0]
 
     def migrate(state: SlabState):
         pos, vel, typ, mask = (x[0] for x in state)
-        cap = pos.shape[0]
-        hc = spec.halo_capacity
-        idx_s = jax.lax.axis_index(spatial_axis)
-        slab_lo = idx_s.astype(jnp.float32) * spec.slab_width
-        x = pos[:, 0] - slab_lo
-        go_left = mask & (x < 0)
-        go_right = mask & (x >= spec.slab_width)
-        stay = mask & ~go_left & ~go_right
+        (pos, vel, typ, mask), ovf = _migrate_local(
+            pos, vel, typ, mask, spec, spatial_axis)
+        return SlabState(pos=pos[None], vel=vel[None], typ=typ[None],
+                         mask=mask[None]), jax.lax.pmax(ovf, spatial_axis)
 
-        def pack(sel):
-            order = jnp.argsort(jnp.where(sel, 0, 1), stable=True)
-            idx = order[:hc]
-            valid = sel[idx]
-            ovf = jnp.sum(sel) - jnp.sum(valid)
-            return (jnp.where(valid[:, None], pos[idx], 0.0),
-                    jnp.where(valid[:, None], vel[idx], 0.0),
-                    jnp.where(valid, typ[idx], 0), valid, ovf)
-
-        lp, lv, lt, lval, l_ovf = pack(go_left)
-        rp, rv, rt, rval, r_ovf = pack(go_right)
-        rightp = [(i, (i + 1) % n) for i in range(n)]
-        leftp = [(i, (i - 1) % n) for i in range(n)]
-        in_l = jax.tree.map(lambda t: jax.lax.ppermute(t, spatial_axis, rightp),
-                            (rp, rv, rt, rval))     # from left slab
-        in_r = jax.tree.map(lambda t: jax.lax.ppermute(t, spatial_axis, leftp),
-                            (lp, lv, lt, lval))     # from right slab
-        # periodic wrap for migrants crossing the box ends:
-        # from slab n-1 arriving at slab 0: x ~ box_x -> x - box_x;
-        # from slab 0 arriving at slab n-1: x < 0 -> x + box_x.
-        ilp, ilv, ilt, ilval = in_l
-        irp, irv, irt, irval = in_r
-        ilp = ilp.at[:, 0].set(jnp.where(
-            (idx_s == 0) & ilval & (ilp[:, 0] >= box_x),
-            ilp[:, 0] - box_x, ilp[:, 0]))
-        irp = irp.at[:, 0].set(jnp.where(
-            (idx_s == n - 1) & irval & (irp[:, 0] < 0),
-            irp[:, 0] + box_x, irp[:, 0]))
-
-        # compact stayers, then append arrivals; ZERO invalidated slots —
-        # a stale copy of a departed atom would otherwise coincide exactly
-        # with its live ghost (NaN force gradients at r = 0).
-        order = jnp.argsort(jnp.where(stay, 0, 1), stable=True)
-        mask_c = stay[order]
-        pos_c = jnp.where(mask_c[:, None], pos[order], 0.0)
-        vel_c = jnp.where(mask_c[:, None], vel[order], 0.0)
-        typ_c = jnp.where(mask_c, typ[order], 0)
-        n_stay = jnp.sum(stay)
-        arr_pos = jnp.concatenate([ilp, irp], 0)
-        arr_vel = jnp.concatenate([ilv, irv], 0)
-        arr_typ = jnp.concatenate([ilt, irt], 0)
-        arr_val = jnp.concatenate([ilval, irval], 0)
-        # place arrival j at slot n_stay + rank(j); invalid/overflow -> cap
-        # (out of range, dropped by mode="drop")
-        rank = jnp.cumsum(arr_val) - 1
-        slot = jnp.where(arr_val, n_stay + rank, cap).astype(jnp.int32)
-        m_ovf = jnp.maximum(jnp.max(jnp.where(arr_val, slot, 0)) - (cap - 1), 0)
-        pos_c = pos_c.at[slot].set(arr_pos, mode="drop")
-        vel_c = vel_c.at[slot].set(arr_vel, mode="drop")
-        typ_c = typ_c.at[slot].set(arr_typ, mode="drop")
-        mask_c = mask_c.at[slot].set(arr_val, mode="drop")
-        ovf = jnp.maximum(jnp.maximum(l_ovf, r_ovf), m_ovf)
-        return SlabState(pos=pos_c[None], vel=vel_c[None], typ=typ_c[None],
-                         mask=mask_c[None]), jax.lax.pmax(ovf, spatial_axis)
-
-    state_spec = SlabState(pos=P(spatial_axis), vel=P(spatial_axis),
-                           typ=P(spatial_axis), mask=P(spatial_axis))
+    state_spec = _state_pspec(spatial_axis)
     return shard_map(migrate, mesh=mesh, in_specs=(state_spec,),
                      out_specs=(state_spec, P()), check_vma=False)
+
+
+# ------------------------------------------- whole-trajectory outer program
+
+class OuterMDProgram:
+    """Distributed MD with migration + rebuild folded into ONE program.
+
+    ``run(state, params, n_segments, seg_len)`` executes
+    ``n_segments x seg_len`` steps as a single jitted shard_map dispatch: a
+    two-level ``lax.scan`` per shard — outer over segments (each segment
+    starts with scan-safe migration, then the halo-exchange + rebuild +
+    Verlet step scanned ``seg_len`` times inside). Host round-trips drop
+    from one per segment to one per chunk; overflow flags (halo, neighbor,
+    migration) come back stacked in the thermo fetch and are checked by
+    :func:`check_segment_thermo` once per chunk.
+
+    Jitted programs are cached per ``(n_segments, seg_len)``; ``build``
+    exposes the raw callable so the production dry-run can lower/compile it
+    at paper scale.
+    """
+
+    def __init__(self, cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
+                 masses: Tuple[float, ...], dt_fs: float,
+                 impl: Optional[str] = None, spatial_axis="data",
+                 model_axis: str = "model", decomp: str = "atoms",
+                 neighbor: str = "cells", donate: Optional[bool] = None):
+        self._step_local = make_local_md_step(
+            cfg, spec, mesh, masses, dt_fs, impl=impl,
+            spatial_axis=spatial_axis, model_axis=model_axis, decomp=decomp,
+            neighbor=neighbor)
+        self._spec = spec
+        self._mesh = mesh
+        self._spatial_axis = spatial_axis
+        if donate is None:
+            donate = jax.default_backend() != "cpu"
+        self._donate = donate
+        self._jits: dict = {}
+        self.state_pspec = _state_pspec(spatial_axis)
+        self.thermo_pspec = {**{k: P() for k in THERMO_KEYS},
+                             "mig_overflow": P()}
+
+    def build(self, n_segments: int, seg_len: int):
+        """The un-jitted shard_map'd ``(params, state) -> (state, thermo)``.
+
+        thermo leaves are stacked ``(n_segments, seg_len)`` (psum'd scalars
+        per step) plus ``mig_overflow`` stacked ``(n_segments,)``.
+        """
+        spec, spatial_axis = self._spec, self._spatial_axis
+        step_local = self._step_local
+
+        def program(params, state: SlabState):
+            pos, vel, typ, mask = (x[0] for x in state)
+
+            def seg_body(st, _):
+                st, m_ovf = _migrate_local(*st, spec, spatial_axis)
+
+                def step_body(s, _):
+                    return step_local(params, *s)
+
+                st, th = jax.lax.scan(step_body, st, None, length=seg_len)
+                th["mig_overflow"] = jax.lax.pmax(m_ovf, spatial_axis)
+                return st, th
+
+            (pos, vel, typ, mask), th = jax.lax.scan(
+                seg_body, (pos, vel, typ, mask), None, length=n_segments)
+            new_state = SlabState(pos=pos[None], vel=vel[None], typ=typ[None],
+                                  mask=mask[None])
+            return new_state, th
+
+        return shard_map(program, mesh=self._mesh,
+                         in_specs=(P(), self.state_pspec),
+                         out_specs=(self.state_pspec, self.thermo_pspec),
+                         check_vma=False)
+
+    def run(self, state: SlabState, params, n_segments: int, seg_len: int):
+        key = (n_segments, seg_len)
+        fn = self._jits.get(key)
+        if fn is None:
+            fn = jax.jit(self.build(n_segments, seg_len),
+                         donate_argnums=(1,) if self._donate else ())
+            self._jits[key] = fn
+        return fn(params, state)
+
+
+def make_outer_md_program(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
+                          masses: Tuple[float, ...], dt_fs: float,
+                          **kw) -> OuterMDProgram:
+    return OuterMDProgram(cfg, spec, mesh, masses, dt_fs, **kw)

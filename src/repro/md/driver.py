@@ -4,13 +4,17 @@ Velocity-Verlet NVE, Maxwell-Boltzmann init at 330 K, neighbor list with a
 2 A buffer rebuilt every 50 steps, thermo (KE/PE/T) recorded every 50 steps.
 99 steps => energy and forces evaluated 100 times.
 
-Two stepping engines share this entry point:
+Three stepping engines share this entry point:
 
-  engine="scan"   (default) the fused on-device segment engine
-                  (``md/stepper.py``): one jitted ``lax.scan`` per rebuild
-                  segment, donated state buffers, thermo fetched once per
-                  segment, overflow checked at segment boundaries with
-                  capacity-escalation retry.
+  engine="outer"  the whole-trajectory two-level scan (``md/stepper.py``
+                  ``OuterEngine``): neighbor rebuild folded INTO the jitted
+                  program, scanned over segments — one host sync and
+                  overflow check per *chunk* of segments, with a chunk
+                  retry from snapshot on capacity overflow.
+  engine="scan"   (default) the fused on-device segment engine: one jitted
+                  ``lax.scan`` per rebuild segment, donated state buffers,
+                  thermo fetched once per segment, overflow checked at
+                  segment boundaries (host rebuild) with escalation retry.
   engine="python" the seed per-step Python loop, kept as the trajectory
                   reference and the benchmark baseline
                   (``benchmarks/md_step_time.py``).
@@ -46,6 +50,7 @@ class MDResult:
     n_atoms: int
     engine: str = "scan"
     escalations: int = 0          # neighbor capacity escalations taken
+    host_syncs: int = 0           # device->host round-trips in the hot loop
 
     @property
     def us_per_step_atom(self) -> float:
@@ -71,9 +76,9 @@ def run_md(cfg: DPConfig, params: Any, pos: np.ndarray, typ: np.ndarray,
            temp_k: float = 330.0, rebuild_every: int = 50,
            thermo_every: int = 50, skin: float = 2.0,
            impl: Optional[str] = None, seed: int = 0,
-           engine: str = "scan",
+           engine: str = "scan", chunk_segments: int = 8,
            escalation: Optional[stepper.EscalationPolicy] = None) -> MDResult:
-    if engine not in ("scan", "python"):
+    if engine not in ("outer", "scan", "python"):
         raise ValueError(f"unknown engine {engine!r}")
     n = len(pos)
     masses = jnp.asarray(lattice.masses_for(cfg.type_map, np.asarray(typ)))
@@ -91,17 +96,28 @@ def run_md(cfg: DPConfig, params: Any, pos: np.ndarray, typ: np.ndarray,
                               rebuild_every=rebuild_every,
                               thermo_every=thermo_every, impl=impl)
 
-    # ---------------------------------------------- fused scan-segment path
+    # ------------------------------------- fused on-device paths (scan/outer)
     build = stepper.build_neighbors_escalating(
         cfg, spec, box_np, pos, typ, escalation)
     escalations = build.escalations
     _, f, _ = dp_model.dp_energy_forces(
         params, build.cfg_run, pos, build.nlist, typ, boxj, impl=impl,
         nsel_norm=cfg.nsel)
+
+    if engine == "outer":
+        return _run_md_outer(cfg, params, pos, vel, f, typ, boxj, box_np,
+                             masses, build, steps=steps, dt_fs=dt_fs,
+                             rebuild_every=rebuild_every,
+                             thermo_every=thermo_every,
+                             chunk_segments=chunk_segments, impl=impl,
+                             escalation=escalation,
+                             escalations0=escalations)
+
     eng = stepper.vv_segment_engine(build.cfg_run, impl, cfg.nsel)
     carry = stepper.VVCarry(pos, vel, f)
 
     thermo: List[Dict[str, float]] = []
+    host_syncs = 1                      # initial build's overflow check
     t0 = time.time()
     step_base = 0
     for seg_len in stepper.segment_schedule(steps, rebuild_every):
@@ -111,6 +127,7 @@ def run_md(cfg: DPConfig, params: Any, pos: np.ndarray, typ: np.ndarray,
             # per segment, not per step).
             build = stepper.build_neighbors_escalating(
                 cfg, build.spec, box_np, carry.pos, typ, escalation)
+            host_syncs += 1
             if build.escalations:
                 escalations += build.escalations
                 eng = stepper.vv_segment_engine(build.cfg_run, impl, cfg.nsel)
@@ -120,13 +137,86 @@ def run_md(cfg: DPConfig, params: Any, pos: np.ndarray, typ: np.ndarray,
         thermo.extend(stepper.thermo_rows(
             np.asarray(th["pe"]), np.asarray(th["ke"]), step_base, steps,
             thermo_every, n))
+        host_syncs += 1
         step_base += seg_len
     carry.pos.block_until_ready()
     wall = time.time() - t0
     return MDResult(thermo=thermo, final_pos=np.asarray(carry.pos),
                     final_vel=np.asarray(carry.vel), wall_s=wall,
                     steps=steps, n_atoms=n, engine="scan",
-                    escalations=escalations)
+                    escalations=escalations, host_syncs=host_syncs)
+
+
+def _run_md_outer(cfg, params, pos, vel, f, typ, boxj, box_np, masses,
+                  build: stepper.NeighborBuild, *, steps, dt_fs,
+                  rebuild_every, thermo_every, chunk_segments, impl,
+                  escalation, escalations0):
+    """Whole-trajectory two-level scan: rebuild folded into the program.
+
+    Chunks of ``chunk_segments`` rebuild segments run as ONE jitted
+    ``lax.scan`` over segments (each segment: on-device neighbor rebuild at
+    current positions, then ``rebuild_every`` Verlet steps scanned inside).
+    The host touches the device once per chunk: the accumulated overflow
+    flag (+ the chunk's stacked thermo ride along in the same fetch). On
+    overflow the rebuilt list silently truncated inside the trace, so the
+    whole chunk is REPLAYED from its entry snapshot with geometrically
+    escalated capacities — the segment engine's escalation policy applied
+    at chunk granularity (physics pinned by ``nsel_norm=cfg.nsel``).
+    """
+    policy = escalation or stepper.EscalationPolicy()
+    n = pos.shape[0]
+    box_key = tuple(float(b) for b in np.asarray(box_np).reshape(-1))
+    spec, cfg_run = build.spec, build.cfg_run
+    donate = stepper.default_donate()
+    carry = stepper.OuterCarry(pos, vel, f, jnp.zeros((), jnp.int32))
+
+    thermo: List[Dict[str, float]] = []
+    escalations = escalations0
+    host_syncs = 1                      # initial build's overflow check
+    t0 = time.time()
+    step_base = 0
+    for n_segs, seg_len in stepper.chunk_schedule(steps, rebuild_every,
+                                                  chunk_segments):
+        for _ in range(policy.max_attempts + 1):
+            eng = stepper.vv_outer_engine(cfg_run, impl, cfg.nsel, spec,
+                                          box_key, donate)
+            # Chunk-entry snapshot for the escalation replay. Without
+            # donation the input carry stays valid — keeping the reference
+            # is free. With donation the inputs are consumed by the run, so
+            # copy to host first (the buffers are already synced: the
+            # previous chunk's overflow check waited on them).
+            snap = jax.device_get(carry) if donate else carry
+            out, th = eng.run(carry, n_segs, seg_len, params, typ, boxj,
+                              masses, dt_fs)
+            ovf = int(out.overflow)     # THE host sync for this chunk
+            host_syncs += 1
+            if ovf <= 0:
+                carry = out
+                break
+            spec = dataclasses.replace(
+                spec, sel=tuple(policy.grow(s) for s in spec.sel),
+                cell_capacity=policy.grow(spec.cell_capacity))
+            cfg_run = dataclasses.replace(cfg_run, sel=tuple(spec.sel))
+            escalations += 1
+            carry = stepper.OuterCarry(
+                jnp.asarray(snap.pos), jnp.asarray(snap.vel),
+                jnp.asarray(snap.force), jnp.zeros((), jnp.int32))
+        else:
+            raise RuntimeError(
+                f"neighbor capacity overflow persists after "
+                f"{policy.max_attempts} chunk replays (last spec: "
+                f"sel={spec.sel}, cell_capacity={spec.cell_capacity})")
+        # thermo for the whole chunk arrives stacked (n_segs, seg_len)
+        thermo.extend(stepper.thermo_rows(
+            np.asarray(th["pe"]).reshape(-1), np.asarray(th["ke"]).reshape(-1),
+            step_base, steps, thermo_every, n))
+        step_base += n_segs * seg_len
+    carry.pos.block_until_ready()
+    wall = time.time() - t0
+    return MDResult(thermo=thermo, final_pos=np.asarray(carry.pos),
+                    final_vel=np.asarray(carry.vel), wall_s=wall,
+                    steps=steps, n_atoms=n, engine="outer",
+                    escalations=escalations, host_syncs=host_syncs)
 
 
 def _run_md_python(cfg, params, pos, vel, typ, boxj, box_np, masses, spec, *,

@@ -39,39 +39,57 @@ def _min_image(rij: jax.Array, box: Optional[jax.Array]) -> jax.Array:
     return rij - box * jnp.round(rij / box)
 
 
-def _pack_sections(
+def pack_type_sections(
     cand: jax.Array,      # (N, C) candidate indices (-1 invalid)
-    dist2: jax.Array,     # (N, C) squared distances
+    valid: jax.Array,     # (N, C) candidate validity (already distance-gated)
     cand_type: jax.Array, # (N, C)
-    spec: NeighborSpec,
-    rc2: float,
+    sel: Tuple[int, ...],
 ) -> Tuple[jax.Array, jax.Array]:
-    """Pack candidates into type sections; returns (nlist (N, nsel), overflow)."""
-    n = cand.shape[0]
+    """Pack valid candidates into the DeePMD type-sectioned padded layout.
+
+    For each atom, slots [0, sel_0) hold type-0 neighbors, the next sel_1
+    type-1, ... with -1 padding. Pure static-shape masked form (stable
+    argsort compaction, no data-dependent shapes) — traceable under
+    ``lax.scan``, shared by the single-process, slab-cell, and brute-force
+    rebuild paths. Returns (nlist (N, nsel), overflow excess count).
+    """
     sections = []
     overflow = jnp.zeros((), jnp.int32)
-    for t, cap_t in enumerate(spec.sel):
-        valid = (cand >= 0) & (dist2 < rc2) & (cand_type == t)
+    for t, cap_t in enumerate(sel):
+        vt = valid & (cand_type == t)
         # Stable-sort invalids to the back; ties keep candidate order.
-        order = jnp.argsort(jnp.where(valid, 0, 1), axis=1, stable=True)
+        order = jnp.argsort(jnp.where(vt, 0, 1), axis=1, stable=True)
         packed = jnp.take_along_axis(cand, order, axis=1)
-        pvalid = jnp.take_along_axis(valid, order, axis=1)
+        pvalid = jnp.take_along_axis(vt, order, axis=1)
         if packed.shape[1] < cap_t:   # fewer candidates than capacity: pad
             pad = cap_t - packed.shape[1]
             packed = jnp.pad(packed, ((0, 0), (0, pad)), constant_values=-1)
             pvalid = jnp.pad(pvalid, ((0, 0), (0, pad)))
         sec = jnp.where(pvalid[:, :cap_t], packed[:, :cap_t], -1)
-        overflow = jnp.maximum(overflow, jnp.max(jnp.sum(valid, axis=1)) - cap_t)
+        overflow = jnp.maximum(overflow, jnp.max(jnp.sum(vt, axis=1)) - cap_t)
         sections.append(sec)
     return jnp.concatenate(sections, axis=1), overflow
 
 
-@functools.partial(jax.jit, static_argnames=("spec",))
-def brute_force_neighbors(
+def _pack_sections(
+    cand: jax.Array,
+    dist2: jax.Array,
+    cand_type: jax.Array,
+    spec: NeighborSpec,
+    rc2: float,
+) -> Tuple[jax.Array, jax.Array]:
+    """Distance-gate candidates, then pack into type sections."""
+    return pack_type_sections(cand, (cand >= 0) & (dist2 < rc2), cand_type,
+                              spec.sel)
+
+
+def _brute_force_neighbors(
     pos: jax.Array, atype: jax.Array, spec: NeighborSpec,
     box: Optional[jax.Array] = None, amask: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """O(N^2) reference / small-box fallback (cells would alias under PBC)."""
+    """O(N^2) reference / small-box fallback (cells would alias under PBC).
+
+    Un-jitted traceable form — embeddable inside a ``lax.scan`` body."""
     n = pos.shape[0]
     rij = _min_image(pos[None, :, :] - pos[:, None, :], box)
     d2 = jnp.sum(rij * rij, axis=-1)
@@ -86,18 +104,32 @@ def brute_force_neighbors(
     return _pack_sections(cand, d2, ctype, spec, spec.rcut_nbr**2)
 
 
-def make_cell_list_fn(spec: NeighborSpec, box: np.ndarray):
-    """Build a jit'd O(N) neighbor function for a fixed orthorhombic box.
+@functools.partial(jax.jit, static_argnames=("spec",))
+def brute_force_neighbors(
+    pos: jax.Array, atype: jax.Array, spec: NeighborSpec,
+    box: Optional[jax.Array] = None, amask: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Jitted entry point over :func:`_brute_force_neighbors`."""
+    return _brute_force_neighbors(pos, atype, spec, box, amask)
+
+
+def make_cell_list_fn(spec: NeighborSpec, box: np.ndarray, jit: bool = True):
+    """Build an O(N) neighbor function for a fixed orthorhombic box.
 
     The box is static: cell counts must be compile-time constants. Falls back
     to brute force when the box is too small for 3 cells per dimension.
+
+    With ``jit=False`` the raw traceable function is returned instead of a
+    jitted wrapper — the form the outer engine embeds inside its segment
+    ``lax.scan`` (everything is static-shape, sort-based binning with
+    capacity slots; overflow is a flag in the trace, never a host branch).
     """
     ncell = np.maximum(np.floor(box / spec.rcut_nbr).astype(int), 1)
     if np.any(ncell < 3):
         def small_fn(pos, atype, amask=None):
-            return brute_force_neighbors(
+            return _brute_force_neighbors(
                 pos, atype, spec, jnp.asarray(box), amask)
-        return small_fn
+        return jax.jit(small_fn) if jit else small_fn
 
     ncells = int(np.prod(ncell))
     cell_size = box / ncell
@@ -105,7 +137,6 @@ def make_cell_list_fn(spec: NeighborSpec, box: np.ndarray):
         np.meshgrid(*[[-1, 0, 1]] * 3, indexing="ij"), axis=-1
     ).reshape(-1, 3)                                   # (27, 3)
 
-    @jax.jit
     def fn(pos, atype, amask=None):
         n = pos.shape[0]
         cap = spec.cell_capacity
@@ -148,4 +179,4 @@ def make_cell_list_fn(spec: NeighborSpec, box: np.ndarray):
             cand, d2, ctype, spec, spec.rcut_nbr**2)
         return nlist, jnp.maximum(sec_overflow, cell_overflow)
 
-    return fn
+    return jax.jit(fn) if jit else fn

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.types import DPConfig
+from repro.md.neighbors import pack_type_sections
 
 
 def make_slab_neighbor_fn(cfg: DPConfig, box: Tuple[float, float, float],
@@ -105,20 +106,8 @@ def make_slab_neighbor_fn(cfg: DPConfig, box: Tuple[float, float, float],
         d2 = jnp.where(cand >= 0, jnp.sum(rij * rij, -1), jnp.inf)
         ctype = typ_all[cand.clip(0)]
 
-        sections = []
-        sec_ovf = jnp.zeros((), jnp.int32)
-        for t, cap_t in enumerate(cfg.sel):
-            vt = (cand >= 0) & (d2 < rc2) & (ctype == t) \
-                & center_mask[:, None]
-            order_t = jnp.argsort(jnp.where(vt, 0, 1), axis=1, stable=True)
-            packed = jnp.take_along_axis(cand, order_t, axis=1)
-            pvalid = jnp.take_along_axis(vt, order_t, axis=1)
-            if packed.shape[1] < cap_t:
-                pad = cap_t - packed.shape[1]
-                packed = jnp.pad(packed, ((0, 0), (0, pad)), constant_values=-1)
-                pvalid = jnp.pad(pvalid, ((0, 0), (0, pad)))
-            sections.append(jnp.where(pvalid[:, :cap_t], packed[:, :cap_t], -1))
-            sec_ovf = jnp.maximum(sec_ovf, jnp.max(jnp.sum(vt, 1)) - cap_t)
-        return jnp.concatenate(sections, 1), jnp.maximum(sec_ovf, cell_ovf)
+        valid = (cand >= 0) & (d2 < rc2) & center_mask[:, None]
+        nlist, sec_ovf = pack_type_sections(cand, valid, ctype, cfg.sel)
+        return nlist, jnp.maximum(sec_ovf, cell_ovf)
 
     return fn

@@ -32,6 +32,7 @@ import functools
 from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dp_model
@@ -169,16 +170,13 @@ class VVCarry(NamedTuple):
     force: jax.Array   # (N, 3) eV/A
 
 
-@functools.lru_cache(maxsize=None)
-def vv_segment_engine(cfg_run: DPConfig, impl: Optional[str],
-                      nsel_norm: Optional[int],
-                      donate: Optional[bool] = None) -> SegmentEngine:
-    """Engine whose step is one full kick-drift-(force)-kick Verlet step.
+def make_vv_step(cfg_run: DPConfig, impl: Optional[str],
+                 nsel_norm: Optional[int]) -> Callable:
+    """One full kick-drift-(force)-kick Velocity-Verlet step.
 
-    Cached per (cfg_run, impl, nsel_norm) so repeated ``run_md`` calls —
-    and capacity-escalation retries — reuse compiled segments. Everything
-    array-valued (params, nlist, box, masses, dt) is a traced aux arg.
-    """
+    ``(VVCarry, params, nlist, typ, box, masses, dt) -> (VVCarry, thermo)``
+    — the scanned body shared by :func:`vv_segment_engine` (inner loop only)
+    and :func:`vv_outer_engine` (whole-trajectory two-level scan)."""
 
     def vv_step(carry: VVCarry, params, nlist, typ, box, masses, dt):
         pos, vel, f = carry
@@ -191,7 +189,125 @@ def vv_segment_engine(cfg_run: DPConfig, impl: Optional[str],
         ke = integrator.kinetic_energy(vel, masses)
         return VVCarry(pos, vel, f_new), {"pe": e, "ke": ke}
 
-    return SegmentEngine(vv_step, donate=donate)
+    return vv_step
+
+
+@functools.lru_cache(maxsize=None)
+def vv_segment_engine(cfg_run: DPConfig, impl: Optional[str],
+                      nsel_norm: Optional[int],
+                      donate: Optional[bool] = None) -> SegmentEngine:
+    """Engine whose step is one full kick-drift-(force)-kick Verlet step.
+
+    Cached per (cfg_run, impl, nsel_norm) so repeated ``run_md`` calls —
+    and capacity-escalation retries — reuse compiled segments. Everything
+    array-valued (params, nlist, box, masses, dt) is a traced aux arg.
+    """
+    return SegmentEngine(make_vv_step(cfg_run, impl, nsel_norm),
+                         donate=donate)
+
+
+# ------------------------------------------- two-level scan (outer engine)
+
+class OuterCarry(NamedTuple):
+    """Carry of the outer scan over segments.
+
+    ``overflow`` accumulates the worst neighbor-capacity excess seen by any
+    on-device rebuild in the chunk; it is the ONLY value the host inspects —
+    once per chunk of segments, not per segment.
+    """
+    pos: jax.Array       # (N, 3) A
+    vel: jax.Array       # (N, 3) A/fs
+    force: jax.Array     # (N, 3) eV/A
+    overflow: jax.Array  # () int32
+
+
+class OuterEngine:
+    """Whole-trajectory on-device MD: ``lax.scan`` over rebuild segments.
+
+    ``seg_fn(carry, seg_len, *aux) -> (carry, seg_out)`` runs ONE segment
+    (neighbor rebuild at current positions + ``seg_len`` integration steps,
+    all traced). :meth:`run` scans it over ``n_segments`` segments in a
+    single jitted dispatch — host round-trips drop from one per segment to
+    one per *chunk* of segments. Jits are cached per
+    ``(n_segments, seg_len)``.
+    """
+
+    def __init__(self, seg_fn: Callable, donate: Optional[bool] = None):
+        self._seg_fn = seg_fn
+        self._donate = default_donate() if donate is None else donate
+        self._jits: Dict[Tuple[int, int], Any] = {}
+
+    def run(self, carry: Any, n_segments: int, seg_len: int, *aux: Any):
+        """Returns (carry, seg_out stacked with leading (n_segments,))."""
+        key = (n_segments, seg_len)
+        fn = self._jits.get(key)
+        if fn is None:
+            def run_chunk(carry, *aux, _n=n_segments, _len=seg_len):
+                def body(c, _):
+                    return self._seg_fn(c, _len, *aux)
+                return jax.lax.scan(body, carry, None, length=_n)
+
+            fn = jax.jit(run_chunk,
+                         donate_argnums=(0,) if self._donate else ())
+            self._jits[key] = fn
+        return fn(carry, *aux)
+
+
+@functools.lru_cache(maxsize=None)
+def vv_outer_engine(cfg_run: DPConfig, impl: Optional[str],
+                    nsel_norm: Optional[int],
+                    spec: neighbors.NeighborSpec,
+                    box_key: Tuple[float, ...],
+                    donate: Optional[bool] = None) -> OuterEngine:
+    """Outer engine for the single-process driver.
+
+    Each scanned segment rebuilds the neighbor list ON DEVICE at the
+    segment-start positions (static-shape sort-based binning — the same
+    cell-list code the host path jits, embedded in the trace) and then runs
+    ``seg_len`` Verlet steps against it. Capacity overflow cannot branch
+    inside the trace; it accumulates in the carry and the driver checks it
+    once per chunk, retrying the whole chunk from a snapshot with
+    geometrically escalated capacities (``cfg_run.sel`` == ``spec.sel`` and
+    ``nsel_norm`` pins the physics, so escalation changes padding only).
+    """
+    nbr_fn = neighbors.make_cell_list_fn(
+        spec, np.asarray(box_key, float), jit=False)
+    vv_step = make_vv_step(cfg_run, impl, nsel_norm)
+
+    def outer_seg(carry: OuterCarry, seg_len: int,
+                  params, typ, box, masses, dt):
+        nlist, ovf = nbr_fn(carry.pos, typ)
+        inner = VVCarry(carry.pos, carry.vel, carry.force)
+        inner, th = scan_segment(vv_step, inner, seg_len,
+                                 params, nlist, typ, box, masses, dt)
+        return OuterCarry(inner.pos, inner.vel, inner.force,
+                          jnp.maximum(carry.overflow, ovf)), th
+
+    return OuterEngine(outer_seg, donate=donate)
+
+
+def chunk_schedule(steps: int, rebuild_every: int,
+                   chunk_segments: int) -> List[Tuple[int, int]]:
+    """Group the segment schedule into outer-scan dispatches.
+
+    Returns ``[(n_segments, seg_len), ...]``: full ``rebuild_every``-length
+    segments grouped ``chunk_segments`` at a time, then the trailing partial
+    segment (if any) as its own ``(1, remainder)`` dispatch. One host sync
+    per entry.
+    """
+    if chunk_segments <= 0:
+        raise ValueError(f"chunk_segments={chunk_segments}")
+    if steps < 0 or rebuild_every <= 0:
+        raise ValueError(f"bad schedule: steps={steps} rebuild={rebuild_every}")
+    full, rem = divmod(steps, rebuild_every)
+    out: List[Tuple[int, int]] = []
+    while full > 0:
+        take = min(chunk_segments, full)
+        out.append((take, rebuild_every))
+        full -= take
+    if rem:
+        out.append((1, rem))
+    return out
 
 
 def thermo_rows(pe: np.ndarray, ke: np.ndarray, step_base: int, steps: int,

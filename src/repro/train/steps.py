@@ -26,7 +26,15 @@ class TrainState(NamedTuple):
 
 
 def init_train_state(api: ModelAPI, opt: AdamW, key: jax.Array) -> TrainState:
-    params = api.init(key)
+    # Partitionable threefry makes the random init SHARDING-INVARIANT: with
+    # the legacy RNG (jax_threefry_partitionable=False, the 0.4.x default),
+    # jitting this function with sharded out_shardings changes the sampled
+    # values per mesh shape — FSDP and single-device runs then train
+    # *different models* from step 0 (root cause of the former
+    # test_fsdp_train_matches_single_device xfail; psum ordering was
+    # innocent). Scoped here so init is identical on any mesh.
+    with jax.threefry_partitionable(True):
+        params = api.init(key)
     return TrainState(params=params, opt=opt.init(params),
                       step=jnp.zeros((), jnp.int32))
 

@@ -1,7 +1,16 @@
 """LM distributed checks on 8 forced host devices:
-  1. FSDP+TP train step produces the same loss trajectory as single-mesh
-     (the sharded program is numerically the same program).
-  2. Elastic checkpoint restart: state saved from a (4,2) mesh restores onto
+  1. Param init is SHARDING-INVARIANT: jitting init_train_state with sharded
+     out_shardings yields bit-identical params to the eager init. (This was
+     the root cause of the historical FSDP-vs-single-device drift: with the
+     legacy non-partitionable threefry RNG, GSPMD rewrote the sharded random
+     init into different draws per mesh shape — the two runs trained
+     different models from step 0. init_train_state now scopes
+     jax.threefry_partitionable(True); psum reduction order was innocent.)
+  2. FSDP+TP train step produces the same loss trajectory as single-mesh
+     (the sharded program is numerically the same program; residual bf16
+     reduction-order noise measured at <7e-4 over 6 steps — asserted with
+     ~7x margin).
+  3. Elastic checkpoint restart: state saved from a (4,2) mesh restores onto
      a (2,4) mesh and continues with identical losses.
 """
 import os
@@ -47,6 +56,21 @@ def main():
     mesh_b = jax.make_mesh((2, 4), ("data", "model"))
     mesh_1 = jax.make_mesh((1, 1), ("data", "model"))
 
+    # init sharding-invariance regression (root cause of the former drift)
+    jitted_a0, state_sh_a0, _, _ = build_step(cfg, api, opt, mesh_a)
+    st_sharded = jax.jit(lambda k: init_train_state(api, opt, k),
+                         out_shardings=state_sh_a0)(jax.random.PRNGKey(0))
+    st_eager = init_train_state(api, opt, jax.random.PRNGKey(0))
+    init_diff = jax.tree.map(
+        lambda x, y: float(np.max(np.abs(np.asarray(x, np.float32)
+                                         - np.asarray(y, np.float32)))),
+        st_sharded.params, st_eager.params)
+    worst_init = max(jax.tree.leaves(init_diff))
+    assert worst_init == 0.0, (
+        "sharded init diverged from eager init (legacy threefry under GSPMD"
+        f" regressed?): max|d|={worst_init}", init_diff)
+    print("ok param init is sharding-invariant (bit-exact)", flush=True)
+
     losses = {}
     for name, mesh in (("8dev_4x2", mesh_a), ("1dev", mesh_1)):
         jitted, state_sh, rules, shapes = build_step(cfg, api, opt, mesh)
@@ -59,7 +83,7 @@ def main():
                 traj.append(float(m["loss"]))
         losses[name] = traj
     a, b = np.asarray(losses["8dev_4x2"]), np.asarray(losses["1dev"])
-    assert np.allclose(a, b, rtol=2e-2, atol=2e-2), (a, b)
+    assert np.allclose(a, b, rtol=0.0, atol=5e-3), (np.abs(a - b), a, b)
     print("ok fsdp+tp trajectory matches single-device:", a, flush=True)
 
     # elastic restart onto a different mesh shape

@@ -110,6 +110,39 @@ def main():
     assert dpos < 1e-5 and dvel < 1e-6, (dpos, dvel)
     print(f"ok scan-segment == python loop over {n_steps} distributed steps "
           f"(dpos {dpos:.1e}, dvel {dvel:.1e})", flush=True)
+
+    # whole-trajectory outer program (migration + rebuild INSIDE the scan)
+    # vs the host loop (segment runner + migration step per segment): same
+    # trajectory over several segments, one dispatch total for the outer.
+    n_segs, seg_len = 3, 4
+    state_ref = state0
+    for _ in range(n_segs):
+        state_ref, movf = mig(state_ref)            # migrate at seg start
+        assert int(movf) <= 0
+        state_ref, th_ref = run_segment(state_ref, params_r, seg_len)
+        domain.check_segment_thermo(th_ref)
+    program = domain.make_outer_md_program(
+        cfg, dspec, mesh, (63.546,), 0.5, decomp="atoms", neighbor="cells",
+        donate=False)
+    state_out, th_out = program.run(state0, params_r, n_segs, seg_len)
+    domain.check_segment_thermo(th_out)
+    assert np.asarray(th_out["pe"]).shape == (n_segs, seg_len)
+    assert np.asarray(th_out["mig_overflow"]).shape == (n_segs,)
+    np.testing.assert_allclose(np.asarray(th_out["pe"])[-1],
+                               np.asarray(th_ref["pe"]), rtol=1e-5, atol=1e-5)
+    # masks can be slot-permuted only if migration ordering diverged; they
+    # must not: identical program order => identical slot layout.
+    assert bool(jnp.all(state_out.mask == state_ref.mask))
+    dpos = float(jnp.max(jnp.abs(jnp.where(
+        state_ref.mask[..., None], state_out.pos - state_ref.pos, 0.0))))
+    dvel = float(jnp.max(jnp.abs(jnp.where(
+        state_ref.mask[..., None], state_out.vel - state_ref.vel, 0.0))))
+    assert dpos < 1e-5 and dvel < 1e-6, (dpos, dvel)
+    n_conserved = int(jnp.sum(state_out.mask))
+    assert n_conserved == len(pos), n_conserved
+    print(f"ok outer two-level scan == host segment loop over {n_segs} "
+          f"segments x {seg_len} steps (dpos {dpos:.1e}, dvel {dvel:.1e})",
+          flush=True)
     print("ALL DISTRIBUTED MD CHECKS PASSED")
 
 if __name__ == "__main__":

@@ -27,6 +27,18 @@ def test_segment_schedule():
         stepper.segment_schedule(10, 0)
 
 
+def test_chunk_schedule():
+    assert stepper.chunk_schedule(99, 20, 8) == [(4, 20), (1, 19)]
+    assert stepper.chunk_schedule(99, 20, 2) == [(2, 20), (2, 20), (1, 19)]
+    assert stepper.chunk_schedule(100, 50, 8) == [(2, 50)]
+    assert stepper.chunk_schedule(7, 50, 8) == [(1, 7)]
+    assert stepper.chunk_schedule(0, 50, 8) == []
+    with pytest.raises(ValueError):
+        stepper.chunk_schedule(10, 10, 0)
+    with pytest.raises(ValueError):
+        stepper.chunk_schedule(10, 0, 4)
+
+
 def test_scan_matches_python_loop_trajectory(tiny_cfg, tiny_params):
     """99 steps across 5 segment boundaries: the fused engine must retrace
     the seed python loop (same positions list builds at the same positions;
@@ -41,6 +53,113 @@ def test_scan_matches_python_loop_trajectory(tiny_cfg, tiny_params):
         assert abs(a["pe"] - b["pe"]) < 1e-4, (a, b)
         assert abs(a["etot"] - b["etot"]) < 1e-4, (a, b)
         assert abs(a["temp"] - b["temp"]) < 0.1, (a, b)
+
+
+def test_outer_matches_scan_matches_python(tiny_cfg, tiny_params):
+    """Three-way engine parity over 99 steps with rebuild_every=20: four
+    rebuild boundaries, all folded inside ONE outer-scan dispatch for the
+    full segments (chunk_segments=8 > 4). outer and scan execute the same
+    program order, so they agree bit-exactly; python differs only by fp
+    summation order."""
+    rp = _run(tiny_cfg, tiny_params, "python")
+    rs = _run(tiny_cfg, tiny_params, "scan")
+    ro = _run(tiny_cfg, tiny_params, "outer")
+    assert ro.engine == "outer"
+    # outer vs scan: identical op order => bit-exact trajectory
+    np.testing.assert_array_equal(ro.final_pos, rs.final_pos)
+    np.testing.assert_array_equal(ro.final_vel, rs.final_vel)
+    # outer vs the seed python loop: fp-order tolerance
+    np.testing.assert_allclose(ro.final_pos, rp.final_pos, atol=1e-4)
+    np.testing.assert_allclose(ro.final_vel, rp.final_vel, atol=1e-5)
+    assert [t["step"] for t in ro.thermo] == [t["step"] for t in rp.thermo]
+    for a, b in zip(ro.thermo, rp.thermo):
+        assert abs(a["pe"] - b["pe"]) < 1e-4, (a, b)
+        assert abs(a["etot"] - b["etot"]) < 1e-4, (a, b)
+    # the whole point: 4 full segments + trailing partial ran in 2 dispatches
+    # (+1 initial build) instead of scan's per-segment host rebuild + fetch
+    assert ro.host_syncs == 3, ro.host_syncs
+    assert ro.host_syncs < rs.host_syncs, (ro.host_syncs, rs.host_syncs)
+
+
+def test_outer_single_chunk_many_boundaries(tiny_cfg, tiny_params):
+    """>= 3 rebuild boundaries inside one jitted scan: 80 steps at
+    rebuild_every=20 is 4 segments -> 3 interior boundaries, one dispatch,
+    exactly 2 host syncs total (initial build + the chunk fetch)."""
+    rs = _run(tiny_cfg, tiny_params, "scan", steps=80)
+    ro = _run(tiny_cfg, tiny_params, "outer", steps=80)
+    assert ro.host_syncs == 2, ro.host_syncs
+    np.testing.assert_array_equal(ro.final_pos, rs.final_pos)
+    np.testing.assert_array_equal(ro.final_vel, rs.final_vel)
+
+
+def test_outer_chunk_retry_on_overflow_preserves_trajectory(tiny_cfg,
+                                                            tiny_params):
+    """Outer-loop capacity overflow triggers the chunk replay WITHOUT
+    corrupting the trajectory: force the first chunk to overflow on device
+    by handing the outer runner a spec far below the real neighbor count
+    (bypassing the host-side initial escalation), and require the result to
+    match the clean run bit-for-bit after the retries."""
+    import dataclasses as dc
+
+    import jax.numpy as jnp
+
+    from repro.core import dp_model
+    from repro.md import driver as drv
+
+    pos, typ, box = lattice.fcc_copper(3, 3, 3)
+    posj = jax.numpy.asarray(pos, jnp.float32)
+    typj = jax.numpy.asarray(typ, jnp.int32)
+    boxj = jax.numpy.asarray(box, jnp.float32)
+    masses = jnp.asarray(
+        lattice.masses_for(tiny_cfg.type_map, np.asarray(typ)))
+    vel = jax.numpy.zeros_like(posj)
+    kw = dict(steps=40, dt_fs=1.0, rebuild_every=10, thermo_every=20,
+              chunk_segments=8, impl=None, escalation=None, escalations0=0)
+
+    # clean reference: ample capacities from the start, same nsel_norm
+    spec_ok = neighbors.NeighborSpec(rcut_nbr=tiny_cfg.rcut + 0.5,
+                                     sel=tiny_cfg.sel)
+    build_ok = stepper.build_neighbors_escalating(
+        tiny_cfg, spec_ok, np.asarray(box, float), posj, typj)
+    assert build_ok.escalations == 0
+    _, f0, _ = dp_model.dp_energy_forces(
+        tiny_params, build_ok.cfg_run, posj, build_ok.nlist, typj, boxj,
+        nsel_norm=tiny_cfg.nsel)
+    ref = drv._run_md_outer(tiny_cfg, tiny_params, posj, vel, f0, typj,
+                            boxj, np.asarray(box, float), masses, build_ok,
+                            **kw)
+    assert ref.escalations == 0
+
+    # forced-overflow run: same valid initial force, but the in-scan
+    # rebuilds start with sel=(4,) — the first chunk MUST overflow, replay
+    # from its snapshot with grown capacities, and land on the same physics
+    spec_small = neighbors.NeighborSpec(rcut_nbr=tiny_cfg.rcut + 0.5,
+                                        sel=(4,))
+    build_small = stepper.NeighborBuild(
+        nlist=build_ok.nlist,
+        cfg_run=dc.replace(tiny_cfg, sel=(4,)),
+        spec=spec_small, escalations=0)
+    res = drv._run_md_outer(tiny_cfg, tiny_params, posj, vel, f0, typj,
+                            boxj, np.asarray(box, float), masses,
+                            build_small, **kw)
+    assert res.escalations > 0
+    np.testing.assert_allclose(res.final_pos, ref.final_pos, atol=1e-6)
+    np.testing.assert_allclose(res.final_vel, ref.final_vel, atol=1e-6)
+    assert [t["step"] for t in res.thermo] == [t["step"] for t in ref.thermo]
+    for a, b in zip(res.thermo, ref.thermo):
+        assert abs(a["pe"] - b["pe"]) < 1e-5, (a, b)
+
+
+def test_outer_escalates_like_scan_from_small_capacity(tiny_cfg,
+                                                       tiny_params):
+    """run_md(engine='outer') with a too-small sel escalates at the initial
+    host build (same policy as scan) and retraces the scan engine."""
+    import dataclasses as dc
+    small = dc.replace(tiny_cfg, sel=(4,))
+    rs = _run(small, tiny_params, "scan", steps=40, rebuild_every=10)
+    ro = _run(small, tiny_params, "outer", steps=40, rebuild_every=10)
+    assert ro.escalations > 0 and rs.escalations > 0
+    np.testing.assert_allclose(ro.final_pos, rs.final_pos, atol=1e-6)
 
 
 def test_scan_engine_conserves_energy(tiny_cfg, tiny_params):
