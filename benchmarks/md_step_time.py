@@ -28,12 +28,13 @@ import os
 import statistics
 import subprocess
 import sys
+import time
 
 import jax
 
 from repro.core import dp_model
 from repro.core.types import DPConfig
-from repro.md import driver, lattice
+from repro.md import api, driver, lattice
 
 
 def copper_cfg(tiny: bool) -> DPConfig:
@@ -51,17 +52,29 @@ ENGINES = ("python", "scan", "outer")
 
 def bench_single_process(args, steps: int, reps: int):
     cfg = copper_cfg(args.tiny)
-    params = dp_model.init_dp_params(jax.random.PRNGKey(0), cfg)
-    if args.impl != "mlp":
-        params = dp_model.tabulate_model(
-            params, cfg, "quintic" if args.impl == "quintic" else "cheb")
+    if args.potential == "lj":
+        # near-free force eval: what remains is pure engine machinery —
+        # dispatch, rebuild, sync — benchmarkable at much larger --nx
+        params = {}
+        potential = api.LJPotential(sel=cfg.sel, rcut_lj=cfg.rcut)
+    else:
+        params = dp_model.init_dp_params(jax.random.PRNGKey(0), cfg)
+        if args.impl != "mlp":
+            params = dp_model.tabulate_model(
+                params, cfg, "quintic" if args.impl == "quintic" else "cheb")
+        potential = None                    # run_md wraps cfg/impl
+    ensemble = api.make_ensemble(args.ensemble) \
+        if args.ensemble != "nve" else None
     pos, typ, box = lattice.fcc_copper(args.nx, args.nx, args.nx)
     kw = dict(steps=steps, dt_fs=1.0, temp_k=330.0, skin=1.0,
               rebuild_every=args.rebuild_every, thermo_every=50,
-              impl=args.impl, chunk_segments=args.chunk_segments)
+              impl=args.impl, chunk_segments=args.chunk_segments,
+              potential=potential, ensemble=ensemble)
 
     print(f"{len(pos)} Cu atoms, {steps} steps, rebuild every "
-          f"{args.rebuild_every}, impl={args.impl}, reps={reps}")
+          f"{args.rebuild_every}, impl={args.impl}, "
+          f"potential={args.potential}, ensemble={args.ensemble}, "
+          f"reps={reps}")
     syncs, times = {}, {e: [] for e in ENGINES}
     for engine in ENGINES:                                           # warm
         syncs[engine] = driver.run_md(cfg, params, pos, typ, box,
@@ -135,7 +148,7 @@ def bench_distributed_worker(args, steps: int, reps: int) -> int:
         state = state0
         t0 = time.time()
         for n_segs, seg_len in sched:
-            state, thermo = program.run(state, params_r, n_segs, seg_len)
+            state, _, thermo = program.run(state, params_r, n_segs, seg_len)
             domain.check_segment_thermo(thermo)
         jax.block_until_ready(state)
         return (time.time() - t0) * 1e6 / (steps * n)
@@ -145,6 +158,7 @@ def bench_distributed_worker(args, steps: int, reps: int) -> int:
     print(json.dumps({
         "slabs": n_slabs, "n_atoms": n, "devices": len(jax.devices()),
         "engine": "outer_distributed",
+        "potential": "dp", "ensemble": "nve",   # worker is always DP+NVE
         "us_per_step_atom_median": statistics.median(times),
         "us_per_step_atom_min": min(times),
         "us_per_step_atom_all": times,
@@ -177,6 +191,73 @@ def bench_distributed(args, steps: int, reps: int):
     return row
 
 
+def git_sha() -> str:
+    """Current commit (env override for CI checkouts), 'unknown' offline."""
+    sha = os.environ.get("GITHUB_SHA", "")
+    if not sha:
+        try:
+            sha = subprocess.run(
+                ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+                cwd=os.path.dirname(os.path.abspath(__file__))).stdout.strip()
+        except OSError:
+            sha = ""
+    return sha[:12] or "unknown"
+
+
+def append_trajectory(path: str, payload: dict) -> None:
+    """Accumulate per-PR perf history instead of overwriting it.
+
+    The artifact keeps the full ``payload`` of the LATEST run plus a
+    ``trajectory`` list of headline rows keyed by git sha (+ the bench
+    shape), so speedups are comparable PR-over-PR. Re-running on the same
+    sha/shape replaces that entry rather than duplicating it.
+    """
+    old = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                old = json.load(f)
+        except (OSError, ValueError):
+            old = {}
+    entry = {
+        "git_sha": git_sha(),
+        "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "system": payload["system"],
+        "n_atoms": payload["n_atoms"],
+        "steps": payload["steps"],
+        "rebuild_every": payload["rebuild_every"],
+        "tiny": payload["tiny"],
+        "impl": payload["impl"],
+        "potential": payload.get("potential", "dp"),
+        "ensemble": payload.get("ensemble", "nve"),
+        "us_per_step_atom_min": {
+            "python": payload["python_loop"]["us_per_step_atom_min"],
+            "scan": payload["scan_segment"]["us_per_step_atom_min"],
+            "outer": payload["outer_scan"]["us_per_step_atom_min"],
+        },
+        "speedup_scan_over_python": payload["speedup_scan_over_python"],
+        "speedup_outer_over_scan": payload["speedup_outer_over_scan"],
+    }
+    # the distributed worker always runs DP mlp + NVE (see
+    # bench_distributed_worker); never record its timing under another
+    # potential/ensemble key
+    if payload.get("distributed", {}).get("us_per_step_atom_min") and \
+            (entry["potential"], entry["ensemble"]) == ("dp", "nve") and \
+            entry["impl"] == "mlp":
+        entry["us_per_step_atom_min"]["outer_distributed"] = \
+            payload["distributed"]["us_per_step_atom_min"]
+    def _key(e):
+        # the full protocol shape: entries measured under different
+        # steps/rebuild cadence are NOT comparable and must coexist
+        return (e.get("git_sha"), e.get("system"), e.get("steps"),
+                e.get("rebuild_every"), e.get("tiny"), e.get("impl"),
+                e.get("potential", "dp"), e.get("ensemble", "nve"))
+
+    traj = [e for e in old.get("trajectory", []) if _key(e) != _key(entry)]
+    traj.append(entry)
+    payload["trajectory"] = traj
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tiny", action="store_true",
@@ -192,6 +273,11 @@ def main(argv=None) -> int:
     ap.add_argument("--chunk-segments", type=int, default=32,
                     help="outer engine: segments fused per dispatch")
     ap.add_argument("--impl", default="mlp", choices=("mlp", "quintic", "cheb"))
+    ap.add_argument("--potential", default="dp", choices=("dp", "lj"),
+                    help="lj: near-free forces isolate engine overhead "
+                         "(and allow much larger --nx)")
+    ap.add_argument("--ensemble", default="nve",
+                    choices=api.ENSEMBLE_CHOICES)
     ap.add_argument("--min-speedup", type=float, default=None,
                     help="exit nonzero if scan/python speedup falls below")
     ap.add_argument("--min-outer-speedup", type=float, default=None,
@@ -228,6 +314,8 @@ def main(argv=None) -> int:
         "steps": steps,
         "rebuild_every": args.rebuild_every,
         "impl": args.impl,
+        "potential": args.potential,
+        "ensemble": args.ensemble,
         "tiny": args.tiny,
         "backend": jax.default_backend(),
         "jax_version": jax.__version__,
@@ -239,9 +327,11 @@ def main(argv=None) -> int:
     }
     if args.dist_slabs:
         payload["distributed"] = bench_distributed(args, steps, reps)
+    append_trajectory(args.out, payload)
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=1)
-    print(f"wrote {args.out}")
+    print(f"wrote {args.out} ({len(payload['trajectory'])} trajectory "
+          f"entries)")
 
     rc = 0
     if payload.get("distributed", {}).get("status") == "failed":
@@ -258,6 +348,25 @@ def main(argv=None) -> int:
               f"{args.min_outer_speedup:.2f}x")
         rc = 1
     return rc
+
+
+def run():
+    """``benchmarks.run`` entry: tiny shape, one rep, headline CSV rows.
+
+    Writes/extends ``BENCH_md.json`` exactly like the CLI (the trajectory
+    list accumulates across PRs, keyed by git sha).
+    """
+    rc = main(["--tiny", "--reps", "1", "--steps", "40"])
+    with open("BENCH_md.json") as f:
+        payload = json.load(f)
+    rows = [{"engine": name,
+             "us_per_step_atom_min": payload[key]["us_per_step_atom_min"],
+             "host_syncs": payload[key]["host_syncs"],
+             "failed": rc != 0}
+            for name, key in (("python", "python_loop"),
+                              ("scan", "scan_segment"),
+                              ("outer", "outer_scan"))]
+    return rows
 
 
 if __name__ == "__main__":

@@ -11,12 +11,18 @@ import io
 import sys
 import time
 
-BENCHES = ("fig2", "fig7", "table1", "fig9_11", "lm_roofline")
+BENCHES = ("fig2", "fig7", "table1", "fig9_11", "lm_roofline", "md_step")
 
 
 def _load(name):
     if name == "fig2":
         from benchmarks import fig2_tabulation_accuracy as m
+        return m.run
+    if name == "md_step":
+        # three-engine MD stepping bench; also extends the BENCH_md.json
+        # perf trajectory (headline numbers keyed by git sha, accumulated
+        # across PRs — the CI artifact carries the history)
+        from benchmarks import md_step_time as m
         return m.run
     if name == "fig7":
         from benchmarks import fig7_step_ladder as m

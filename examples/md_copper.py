@@ -1,15 +1,20 @@
 """The paper's copper MD protocol end-to-end (Sec. 4, CPU-scale).
 
 99 Velocity-Verlet steps at dt=1 fs, Maxwell-Boltzmann init at 330 K,
-neighbor list with 2 A skin rebuilt every 50 steps, thermo every 50 —
-run with the FULL implementation ladder and timed per step. The inner loop
-runs through the fused scan-segment engine (``md/stepper.py``) by default;
-``--engine outer`` folds the neighbor rebuild into a whole-trajectory
-two-level scan (one host sync per chunk of segments) and
-``--engine python`` reproduces the seed per-step loop for comparison:
+neighbor list with 2 A skin rebuilt every 50 steps, thermo every 50 — built
+on the composable simulation API: a ``SimulationSpec`` picks the potential
+(the DP implementation ladder, or analytic LJ) and the ensemble (NVE /
+Langevin / Berendsen), and ``Simulation.run`` executes it on any of the
+three stepping engines:
 
   PYTHONPATH=src python examples/md_copper.py [--nx 4] [--steps 99] \
-      [--engine outer|scan|python]
+      [--engine outer|scan|python] [--potential dp|lj] \
+      [--ensemble nve|nvt_langevin|berendsen]
+
+With the default ``--potential dp`` the FULL implementation ladder runs
+(mlp -> quintic -> cheb tabulation) and is timed per step; ``--potential
+lj`` runs the near-free Lennard-Jones instead — the engine-overhead
+benchmark shape, and the CI smoke for the pluggable seam.
 """
 
 import argparse
@@ -17,9 +22,8 @@ import argparse
 import jax
 import numpy as np
 
-from repro.core import dp_model
 from repro.core.types import DPConfig
-from repro.md import driver, lattice
+from repro.md import api, lattice
 
 
 def main():
@@ -30,28 +34,47 @@ def main():
                     choices=("outer", "scan", "python"),
                     help="whole-trajectory two-level scan, fused lax.scan "
                          "segments (default), or the seed per-step loop")
+    ap.add_argument("--potential", default="dp", choices=("dp", "lj"),
+                    help="dp runs the full implementation ladder; lj is the "
+                         "analytic Lennard-Jones (no DP params)")
+    ap.add_argument("--ensemble", default="nve",
+                    choices=api.ENSEMBLE_CHOICES)
+    ap.add_argument("--temp", type=float, default=330.0)
+    ap.add_argument("--friction", type=float, default=0.1,
+                    help="nvt_langevin friction (1/fs)")
+    ap.add_argument("--tau", type=float, default=100.0,
+                    help="berendsen time constant (fs)")
     args = ap.parse_args()
 
     # paper-shaped copper model, scaled for CPU (sel 128 vs the paper's 512)
     cfg = DPConfig(ntypes=1, rcut=6.0, rcut_smth=2.0, sel=(128,),
                    type_map=("Cu",), embed_widths=(16, 32, 64), axis_neuron=8,
                    fit_widths=(64, 64, 64))
-    params = dp_model.init_dp_params(jax.random.PRNGKey(0), cfg)
     pos, typ, box = lattice.fcc_copper(args.nx, args.nx, args.nx)
-    print(f"{len(pos)} copper atoms, box {np.round(box, 2)}")
+    print(f"{len(pos)} copper atoms, box {np.round(box, 2)}, "
+          f"ensemble {args.ensemble}")
+    ensemble = api.make_ensemble(args.ensemble, temp_k=args.temp,
+                                 friction=args.friction, tau_fs=args.tau)
 
-    ladder = [("mlp", params),
-              ("quintic", dp_model.tabulate_model(params, cfg, "quintic")),
-              ("cheb", dp_model.tabulate_model(params, cfg, "cheb"))]
+    if args.potential == "lj":
+        ladder = [("lj", api.LJPotential(sel=cfg.sel, rcut_lj=cfg.rcut), {})]
+    else:
+        params = api.DPPotential(cfg).init_params(jax.random.PRNGKey(0))
+        ladder = [("mlp", api.make_potential("dp", cfg), params)]
+        for kind in ("quintic", "cheb"):
+            pot = api.make_potential(kind, cfg)
+            ladder.append((kind, pot, pot.prepare_params(params)))
+
     base = None
-    for impl, p in ladder:
-        res = driver.run_md(cfg, p, pos, typ, box, steps=args.steps,
-                            dt_fs=1.0, temp_k=330.0, impl=impl,
-                            engine=args.engine)
+    for name, pot, params in ladder:
+        sim = api.Simulation(api.SimulationSpec(
+            potential=pot, ensemble=ensemble, steps=args.steps, dt_fs=1.0,
+            temp_k=args.temp, engine=args.engine))
+        res = sim.run(params, pos, typ, box)
         drift = abs(res.thermo[-1]["etot"] - res.thermo[0]["etot"])
         if base is None:
             base = res.us_per_step_atom
-        print(f"impl={impl:8s} engine={res.engine:6s} "
+        print(f"impl={name:8s} engine={res.engine:6s} "
               f"{res.us_per_step_atom:8.2f} us/step/atom "
               f"(speedup {base / res.us_per_step_atom:4.1f}x)  "
               f"drift {drift:.2e} eV  T_final {res.thermo[-1]['temp']:.0f} K")

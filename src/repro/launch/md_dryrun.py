@@ -31,7 +31,7 @@ import json
 import sys
 import time
 import traceback
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +42,7 @@ from repro.analysis import roofline as rl
 from repro.core import dp_model
 from repro.core.types import COPPER_DP, WATER_DP, DPConfig
 from repro.launch import mesh as mesh_mod
-from repro.md import domain, stepper
+from repro.md import api, domain, stepper
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,21 +105,32 @@ def dp_model_flops(cfg: DPConfig, n_atoms: int, impl: str) -> float:
 
 def lower_md_cell(cell: MDCell, impl: str, mesh, multi_pod: bool,
                   verbose: bool = True, segment_len: int = 4,
-                  outer_segments: int = 0) -> Dict[str, Any]:
+                  outer_segments: int = 0, potential_name: str = "dp",
+                  ensemble: Optional[Any] = None) -> Dict[str, Any]:
     spatial_axis = ("pod", "data") if multi_pod else "data"
     n_slabs = mesh.shape["data"] * (mesh.shape.get("pod", 1))
     n_model = mesh.shape["model"]
     mesh_name = "2x16x16" if multi_pod else "16x16"
+    ensemble = ensemble or api.NVE()
     name = f"dpmd_{cell.name}/{impl}/{mesh_name}"
+    if potential_name != "dp":
+        name = f"{potential_name}_{cell.name}/{mesh_name}"
+    if type(ensemble) is not api.NVE:
+        name += f"/{type(ensemble).__name__}"
     if outer_segments:
         name += f"/outer{outer_segments}"
     try:
         spec, cap = geometry(cell, n_slabs, n_model)
         cfg = dataclasses.replace(cell.cfg, impl=impl)
+        potential = None                 # make_local_md_step wraps cfg/impl
+        if potential_name == "lj":
+            potential = api.LJPotential(sel=tuple(cfg.sel), rcut_lj=cfg.rcut)
 
         key = jax.random.PRNGKey(0)
 
         def make_params(k):
+            if potential_name == "lj":
+                return {}
             p = dp_model.init_dp_params(k, cfg)
             if impl in ("quintic", "cheb", "cheb_pallas"):
                 kind = "quintic" if impl == "quintic" else "cheb"
@@ -127,24 +138,29 @@ def lower_md_cell(cell: MDCell, impl: str, mesh, multi_pod: bool,
             return p
 
         params_shapes = jax.eval_shape(make_params, key)
+        ens_shapes = jax.eval_shape(lambda: ensemble.init_state(n_slabs))
         if outer_segments:
             # whole-trajectory program: migration + rebuild inside the scan
             program = domain.make_outer_md_program(
                 cfg, spec, mesh, cell.masses, cell.dt_fs, impl=impl,
-                spatial_axis=spatial_axis, decomp="atoms", neighbor="cells")
+                spatial_axis=spatial_axis, decomp="atoms", neighbor="cells",
+                potential=potential, ensemble=ensemble)
             outer_fn = program.build(outer_segments, segment_len)
 
-            def seg_fn(params, state):
-                return outer_fn(params, state)
+            def seg_fn(params, state, ens):
+                return outer_fn(params, state, ens)
         else:
             step_fn = domain.make_distributed_md_step(
                 cfg, spec, mesh, cell.masses, cell.dt_fs, impl=impl,
-                spatial_axis=spatial_axis, decomp="atoms", neighbor="cells")
+                spatial_axis=spatial_axis, decomp="atoms", neighbor="cells",
+                potential=potential, ensemble=ensemble)
 
-            def seg_fn(params, state):
+            def seg_fn(params, state, ens):
                 # the production inner loop: one scan per rebuild segment
-                return stepper.scan_segment(
-                    lambda st, p: step_fn(p, st), state, segment_len, params)
+                (state, ens), th = stepper.scan_segment(
+                    lambda c, p: step_fn(p, c[0], c[1]), (state, ens),
+                    segment_len, params)
+                return state, ens, th
 
         sl = spec.atom_capacity
         state_shapes = domain.SlabState(
@@ -155,26 +171,31 @@ def lower_md_cell(cell: MDCell, impl: str, mesh, multi_pod: bool,
         sp = P(spatial_axis) if isinstance(spatial_axis, str) else P(spatial_axis)
         state_sh = domain.SlabState(*(NamedSharding(mesh, sp),) * 4)
         rep_tree = jax.tree.map(lambda _: NamedSharding(mesh, P()), params_shapes)
+        ens_sh = jax.tree.map(lambda _: NamedSharding(mesh, sp), ens_shapes)
         thermo_keys = list(domain.THERMO_KEYS)
         if outer_segments:
             thermo_keys.append("mig_overflow")
         thermo_sh = {k: NamedSharding(mesh, P()) for k in thermo_keys}
 
         t0 = time.time()
-        jitted = jax.jit(seg_fn, in_shardings=(rep_tree, state_sh),
-                         out_shardings=(state_sh, thermo_sh),
+        jitted = jax.jit(seg_fn, in_shardings=(rep_tree, state_sh, ens_sh),
+                         out_shardings=(state_sh, ens_sh, thermo_sh),
                          donate_argnums=(1,))
-        lowered = jitted.lower(params_shapes, state_shapes)
+        lowered = jitted.lower(params_shapes, state_shapes, ens_shapes)
         compiled = lowered.compile()
         t_compile = time.time() - t0
 
         n_atoms_global = cap * n_slabs
         mesh_shape = tuple(mesh.shape[a] for a in mesh.axis_names)
         steps_lowered = segment_len * max(outer_segments, 1)
+        if potential_name == "lj":
+            # ~30 flops per neighbor slot, fwd + force backward ~ 3x
+            model_flops = 3.0 * n_atoms_global * cfg.nsel * 30.0
+        else:
+            model_flops = dp_model_flops(cfg, n_atoms_global, impl)
         report = rl.analyze_compiled(
             name, compiled, n_chips=mesh.size,
-            model_flops=steps_lowered * dp_model_flops(cfg, n_atoms_global,
-                                                       impl),
+            model_flops=steps_lowered * model_flops,
             mesh_shape=mesh_shape)
         if impl == "cheb_pallas":
             # interpret=True lowers the kernel as a scanned XLA program whose
@@ -247,12 +268,22 @@ def main(argv=None) -> int:
                     help="if > 0, lower the whole-trajectory two-level scan "
                          "(this many segments of migration + segment-len "
                          "steps) instead of a single inner segment")
+    ap.add_argument("--potential", default="dp", choices=("dp", "lj"),
+                    help="force model plugged into the lowered program")
+    ap.add_argument("--ensemble", default="nve",
+                    choices=api.ENSEMBLE_CHOICES,
+                    help="integrator/thermostat plugged into the lowered "
+                         "program (Langevin adds per-step RNG ops + a key "
+                         "in the scan carry)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
+    ensemble = api.make_ensemble(args.ensemble)
 
     cells = {"cu": CU, "cu_strong": CU_STRONG, "h2o": H2O}
     systems = args.system or ["cu", "cu_strong", "h2o"]
     impls = args.impl or list(IMPLS)
+    if args.potential == "lj":
+        impls = impls[:1]           # impl ladder is DP-only; one LJ row
     meshes = []
     if args.mesh in ("pod", "both"):
         meshes.append((mesh_mod.make_production_mesh(multi_pod=False), False))
@@ -266,7 +297,9 @@ def main(argv=None) -> int:
             for impl in impls:
                 row = lower_md_cell(cells[s], impl, mesh, multi,
                                     segment_len=args.segment_len,
-                                    outer_segments=args.outer_segments)
+                                    outer_segments=args.outer_segments,
+                                    potential_name=args.potential,
+                                    ensemble=ensemble)
                 rows.append(row)
                 fails += row["status"] == "failed"
     if args.out:

@@ -14,6 +14,12 @@ comm + model-axis decomposition). Two engines:
                   segment boundaries from the host loop.
 
 On a single device both degenerate to 1 slab x 1 shard of the same program.
+
+The force model and the thermostat plug in through the composable
+simulation API (``--potential dp|quintic|cheb|lj``, ``--ensemble
+nve|nvt_langevin|berendsen``): the same scanned programs run the DP ladder
+or the near-free analytic LJ, NVE or thermostatted, single-process or
+slab-decomposed.
 """
 
 import argparse
@@ -24,9 +30,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import dp_model
 from repro.core.types import DPConfig
-from repro.md import domain, integrator, lattice, stepper
+from repro.md import api, domain, integrator, lattice, stepper
 
 
 def main(argv=None):
@@ -45,6 +50,15 @@ def main(argv=None):
                     help="outer engine: rebuild segments fused per dispatch")
     ap.add_argument("--impl", default="mlp",
                     choices=("mlp", "quintic", "cheb"))
+    ap.add_argument("--potential", default="dp",
+                    choices=api.POTENTIAL_CHOICES,
+                    help="force model (lj needs no DP params at all)")
+    ap.add_argument("--ensemble", default="nve",
+                    choices=api.ENSEMBLE_CHOICES)
+    ap.add_argument("--friction", type=float, default=0.1,
+                    help="nvt_langevin friction (1/fs)")
+    ap.add_argument("--tau", type=float, default=100.0,
+                    help="berendsen time constant (fs)")
     args = ap.parse_args(argv)
 
     n_dev = len(jax.devices())
@@ -53,10 +67,16 @@ def main(argv=None):
     cfg = DPConfig(ntypes=1, rcut=4.0, rcut_smth=2.0, sel=(96,),
                    type_map=("Cu",), embed_widths=(8, 16, 32), axis_neuron=4,
                    fit_widths=(32, 32, 32))
-    params = dp_model.init_dp_params(jax.random.PRNGKey(0), cfg)
-    if args.impl != "mlp":
-        kind = "quintic" if args.impl == "quintic" else "cheb"
-        params = dp_model.tabulate_model(params, cfg, kind)
+    ensemble = api.make_ensemble(args.ensemble, temp_k=args.temp,
+                                 friction=args.friction, tau_fs=args.tau)
+    if args.potential == "lj":
+        potential = api.LJPotential(sel=cfg.sel, rcut_lj=cfg.rcut)
+        params = {}
+    else:
+        # make_potential resolves "dp" + a tabulated --impl to the
+        # tabulated adapter, which owns the params post-processing
+        potential = api.make_potential(args.potential, cfg, impl=args.impl)
+        params = potential.init_params(jax.random.PRNGKey(0))
 
     if n_slabs < 2:
         # no decomposition to exercise — the single-process driver is the
@@ -64,10 +84,11 @@ def main(argv=None):
         # images never alias their owners).
         from repro.md import driver
         pos, typ, box = lattice.fcc_copper(args.nx, args.nyz, args.nyz)
-        res = driver.run_md(cfg, params, pos, typ, box, steps=args.steps,
-                            dt_fs=args.dt, temp_k=args.temp, impl=args.impl,
-                            skin=0.5, rebuild_every=args.rebuild_every,
-                            thermo_every=33)
+        sim = api.SimulationSpec(
+            potential=potential, ensemble=ensemble, steps=args.steps,
+            dt_fs=args.dt, temp_k=args.temp, skin=0.5,
+            rebuild_every=args.rebuild_every, thermo_every=33)
+        res = driver.run_simulation(sim, params, pos, typ, box)
         for row in res.thermo:
             print(f"step {row['step']:4d}  E_pot {row['pe']:+.4f}  "
                   f"E_tot {row['etot']:+.4f}  T {row['temp']:.0f} K")
@@ -98,7 +119,8 @@ def main(argv=None):
         lambda x: jax.device_put(x, NamedSharding(mesh, P())), params)
 
     print(f"{n} atoms, {n_slabs} slabs x {args.model_axis} model shards "
-          f"on {n_dev} devices, engine={args.engine}")
+          f"on {n_dev} devices, engine={args.engine}, "
+          f"potential={args.potential}, ensemble={args.ensemble}")
 
     def show(pe, ke, natoms, base, count):
         for i in range(count):
@@ -111,7 +133,9 @@ def main(argv=None):
     if args.engine == "outer":
         program = domain.make_outer_md_program(
             cfg, spec, mesh, (63.546,), args.dt, impl=args.impl,
-            decomp="atoms", neighbor="cells")
+            decomp="atoms", neighbor="cells", potential=potential,
+            ensemble=ensemble)
+        ens = program.init_ensemble_state()
         t0 = time.time()
         base = 0
         for n_segs, seg_len in stepper.chunk_schedule(
@@ -119,7 +143,8 @@ def main(argv=None):
             # ONE dispatch per chunk of segments; migration + rebuild run
             # inside the scanned program. One host fetch checks the chunk's
             # stacked overflow flags and prints its thermo.
-            state, thermo = program.run(state, params_r, n_segs, seg_len)
+            state, ens, thermo = program.run(state, params_r, n_segs,
+                                             seg_len, ens)
             domain.check_segment_thermo(thermo)
             show(np.asarray(thermo["pe"]).reshape(-1),
                  np.asarray(thermo["ke"]).reshape(-1),
@@ -129,15 +154,17 @@ def main(argv=None):
     else:
         step = domain.make_distributed_md_step(
             cfg, spec, mesh, (63.546,), args.dt, impl=args.impl,
-            decomp="atoms", neighbor="cells")
+            decomp="atoms", neighbor="cells", potential=potential,
+            ensemble=ensemble)
         run_segment = domain.make_segment_runner(step)
         migrate = domain.make_migration_step(spec, mesh)
+        ens = domain.init_ensemble_state(ensemble, n_slabs, mesh)
         t0 = time.time()
         base = 0
         for seg_len in stepper.segment_schedule(args.steps,
                                                 args.rebuild_every):
             # one scan dispatch per segment; thermo/overflow fetched after
-            state, thermo = run_segment(state, params_r, seg_len)
+            (state, ens), thermo = run_segment(state, params_r, seg_len, ens)
             domain.check_segment_thermo(thermo)
             show(np.asarray(thermo["pe"]), np.asarray(thermo["ke"]),
                  np.asarray(thermo["n_atoms"]), base, seg_len)

@@ -1,0 +1,439 @@
+"""Composable simulation API: pluggable Potential x Ensemble for all engines.
+
+The paper's system keeps ONE MD loop and swaps the force evaluator through
+progressively cheaper implementations (full embedding net -> tabulation ->
+fused kernels); the related work generalizes the same loop over thermostats
+and model families. This module is that seam for our three stepping engines
+(python / scan / outer, single-process and slab-distributed):
+
+  Potential  ``energy_forces(params, pos, typ, nlist, nmask, box)
+             -> (e, f, stats)`` plus the shard-local
+             ``atomic_energy(params, rij, nmask, typ)`` form the distributed
+             step differentiates through. Adapters:
+               * :class:`DPPotential`        — the Deep Potential model
+                 (carries ``impl``/``nsel_norm`` so the capacity-escalation
+                 physics pinning is preserved through the seam),
+               * :class:`TabulatedDPPotential` — DP with tabulated embedding
+                 nets (owns the params post-processing),
+               * :class:`LJPotential`        — analytic Lennard-Jones:
+                 near-free force eval, so the neighbor/migration/scan
+                 machinery benchmarks at 10-100x larger N on CPU.
+
+  Ensemble   ``init_state`` / ``half_kick`` / ``drift`` / ``finalize``;
+             thermostat state (RNG key, ...) rides in the scan carry so
+             every ensemble works inside the fused whole-trajectory
+             programs. Implementations: :class:`NVE` (velocity Verlet),
+             :class:`NVTLangevin` (kick-drift-kick + per-step
+             Ornstein-Uhlenbeck velocity mixing; ``friction == 0`` is
+             BIT-EXACT NVE by construction — the O-step contributes no
+             ops), :class:`BerendsenThermostat` (per-step velocity
+             rescaling toward ``temp_k``).
+
+  Simulation ``SimulationSpec`` (what to run) + :class:`Simulation` (run
+             it) replace the legacy ``driver.run_md`` kwarg pile;
+             ``run_md`` remains as a thin deprecated shim that builds a
+             spec and stays bit-exact for NVE + DP.
+
+Adapters are frozen (hashable) dataclasses: the stepping engines cache
+compiled programs keyed on ``(potential, ensemble)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dp_model
+from repro.core.types import DPConfig
+from repro.md import integrator
+
+
+# ============================================================== Potential
+
+@runtime_checkable
+class Potential(Protocol):
+    """Force evaluator the MD engines are generic over.
+
+    ``sel``/``rcut``/``type_map`` describe the neighbor-list layout and
+    geometry the engines must provide; ``with_layout`` re-targets the
+    adapter at an escalated/padded slot layout WITHOUT changing physics
+    (the DP adapter pins its descriptor normalization via ``nsel_norm``).
+    """
+
+    sel: Tuple[int, ...]
+
+    @property
+    def rcut(self) -> float: ...
+
+    @property
+    def type_map(self) -> Tuple[str, ...]: ...
+
+    def layout_cfg(self) -> DPConfig: ...
+
+    def with_layout(self, sel: Tuple[int, ...],
+                    nsel_norm: Optional[int] = None) -> "Potential": ...
+
+    def init_params(self, key: jax.Array) -> Any: ...
+
+    def energy_forces(self, params: Any, pos: jax.Array, typ: jax.Array,
+                      nlist: jax.Array, nmask: Optional[jax.Array] = None,
+                      box: Optional[jax.Array] = None
+                      ) -> Tuple[jax.Array, jax.Array, Dict[str, jax.Array]]: ...
+
+    def atomic_energy(self, params: Any, rij: jax.Array, nmask: jax.Array,
+                      typ: jax.Array,
+                      axis_name: Optional[str] = None) -> jax.Array: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class DPPotential:
+    """Deep Potential adapter around ``dp_model``.
+
+    ``impl`` selects the implementation-ladder rung (mlp/quintic/cheb/
+    cheb_pallas); ``nsel_norm`` pins the descriptor normalization to the
+    model's NATIVE neighbor capacity when ``cfg.sel`` has been escalated or
+    padded past it — capacity changes padding, never physics.
+    """
+
+    cfg: DPConfig
+    impl: Optional[str] = None
+    nsel_norm: Optional[int] = None
+
+    @property
+    def sel(self) -> Tuple[int, ...]:
+        return tuple(self.cfg.sel)
+
+    @property
+    def rcut(self) -> float:
+        return float(self.cfg.rcut)
+
+    @property
+    def type_map(self) -> Tuple[str, ...]:
+        return tuple(self.cfg.type_map)
+
+    def layout_cfg(self) -> DPConfig:
+        return self.cfg
+
+    def with_layout(self, sel, nsel_norm=None):
+        # Re-targeting the slot layout must never move the descriptor
+        # normalization: pin it to this adapter's native capacity unless the
+        # caller (e.g. the distributed padding) overrides explicitly.
+        cfg = (self.cfg if tuple(sel) == tuple(self.cfg.sel)
+               else dataclasses.replace(self.cfg, sel=tuple(sel)))
+        return dataclasses.replace(
+            self, cfg=cfg,
+            nsel_norm=nsel_norm or self.nsel_norm or self.cfg.nsel)
+
+    def init_params(self, key):
+        return dp_model.init_dp_params(key, self.cfg)
+
+    def energy_forces(self, params, pos, typ, nlist, nmask=None, box=None):
+        e, f, virial = dp_model.dp_energy_forces(
+            params, self.cfg, pos, nlist, typ, box, impl=self.impl,
+            nsel_norm=self.nsel_norm)
+        return e, f, {"virial": virial}
+
+    def atomic_energy(self, params, rij, nmask, typ, axis_name=None):
+        return dp_model.dp_atomic_energy(
+            params, self.cfg, rij, nmask, typ, impl=self.impl,
+            axis_name=axis_name, nsel_norm=self.nsel_norm)
+
+
+@dataclasses.dataclass(frozen=True)
+class TabulatedDPPotential(DPPotential):
+    """DP with the embedding nets compressed into tables (paper Sec. 3.2).
+
+    ``kind`` in {"quintic", "cheb"}; ``init_params``/``prepare_params`` own
+    the tabulation post-processing so callers hold ONE object that knows
+    both how to build and how to evaluate its parameters.
+    """
+
+    kind: str = "quintic"
+
+    def __post_init__(self):
+        if self.impl is None:
+            object.__setattr__(self, "impl", self.kind)
+
+    def init_params(self, key):
+        return self.prepare_params(dp_model.init_dp_params(key, self.cfg))
+
+    def prepare_params(self, params):
+        """Tabulate an mlp-params pytree (idempotent on SAME-kind tables).
+
+        Tables of the other kind are rebuilt from the retained embedding
+        weights — a quintic table must never flow into the cheb evaluator
+        (the pytrees differ: quintic carries ``step``, cheb ``upper``).
+        """
+        tables = params.get("table", {}).get("nets", {}) \
+            if isinstance(params, dict) else {}
+        marker = "step" if self.kind == "quintic" else "upper"
+        if tables and all(marker in t for t in tables.values()):
+            return params
+        return dp_model.tabulate_model(params, self.cfg, self.kind)
+
+
+@dataclasses.dataclass(frozen=True)
+class LJPotential:
+    """Single-species Lennard-Jones (shifted at rcut), parameter-free.
+
+    The force eval is ~free next to any DP rung, so every piece of engine
+    machinery around it (neighbor rebuilds, halo exchange, migration, the
+    two-level scans) becomes benchmarkable at 10-100x larger N on CPU.
+    Defaults approximate copper (sigma so the r_min ~ the FCC Cu nearest
+    neighbor distance of 2.556 A). Type-blind: every pair uses the same
+    (epsilon, sigma); ``sel`` only fixes the neighbor-list slot layout.
+    """
+
+    epsilon: float = 0.4            # eV
+    sigma: float = 2.277            # A; r_min = 2^(1/6) sigma ~ 2.556 A
+    rcut_lj: float = 6.0            # A
+    sel: Tuple[int, ...] = (128,)
+    type_map: Tuple[str, ...] = ("Cu",)
+
+    @property
+    def rcut(self) -> float:
+        return float(self.rcut_lj)
+
+    def layout_cfg(self) -> DPConfig:
+        """A layout-only DPConfig (sel sections / rcut) for the neighbor
+        machinery; its net-shape fields are never touched."""
+        return DPConfig(ntypes=len(self.sel), rcut=self.rcut_lj,
+                        rcut_smth=0.0, sel=tuple(self.sel),
+                        type_map=tuple(self.type_map))
+
+    def with_layout(self, sel, nsel_norm=None):
+        del nsel_norm                       # LJ has no normalization to pin
+        return dataclasses.replace(self, sel=tuple(sel))
+
+    def init_params(self, key):
+        del key
+        return {}                           # nothing trainable
+
+    def _pair_energy(self, r2, valid):
+        """Per-slot pair energy, exactly zero past rcut (masked, grad-safe)."""
+        gate = valid & (r2 < self.rcut_lj ** 2)
+        r2s = jnp.where(gate, r2, 1.0)      # safe denominator off-gate
+        sr6 = (self.sigma ** 2 / r2s) ** 3
+        e = 4.0 * self.epsilon * (sr6 * sr6 - sr6)
+        src6 = (self.sigma / self.rcut_lj) ** 6
+        e_shift = 4.0 * self.epsilon * (src6 * src6 - src6)
+        return jnp.where(gate, e - e_shift, 0.0)
+
+    def atomic_energy(self, params, rij, nmask, typ, axis_name=None):
+        """Half-pair atomic energies: i gets half of every i-j bond, so the
+        slab-distributed sum over owners is exact (the ghost half is counted
+        by the neighbor's owner slab)."""
+        del params, typ
+        r2 = jnp.sum(rij * rij, axis=-1)
+        e_i = 0.5 * jnp.sum(self._pair_energy(r2, nmask), axis=-1)
+        if axis_name is not None:           # neighbor-slot decomposition:
+            e_i = jax.lax.psum(e_i, axis_name)  # partial sums complete here
+        return e_i
+
+    def energy_forces(self, params, pos, typ, nlist, nmask=None, box=None):
+        rij, nmask_g = dp_model.gather_rij(pos, nlist, box)
+        if nmask is not None:
+            nmask_g = nmask_g & nmask
+
+        def e_of_rij(rij):
+            return jnp.sum(self.atomic_energy(params, rij, nmask_g, typ))
+
+        e, de_drij = jax.value_and_grad(e_of_rij)(rij)
+        nmaskf = nmask_g[..., None].astype(de_drij.dtype)
+        de_drij = de_drij * nmaskf
+        f = jnp.zeros_like(pos)
+        f = f.at[jnp.maximum(nlist, 0)].add(-de_drij)
+        f = f + jnp.sum(de_drij, axis=1)
+        virial = -jnp.einsum("ijk,ijl->kl", rij, de_drij)
+        return e, f, {"virial": virial}
+
+
+# =============================================================== Ensemble
+
+@runtime_checkable
+class Ensemble(Protocol):
+    """Integrator/thermostat the MD engines are generic over.
+
+    Per step the engines run ``half_kick(f) -> drift -> half_kick(f_new) ->
+    finalize``; ``finalize`` applies the thermostat and threads the
+    ensemble's extra state (RNG key, ...) which rides IN the scan carry —
+    that is what lets every ensemble run inside the fused on-device
+    programs. ``init_state(n_replicas)`` returns the stacked per-slab state
+    for the distributed drivers (leading dim ``n_replicas``), or the
+    single-process state when ``n_replicas`` is None; stateless ensembles
+    return an empty pytree, which adds zero ops to the scanned program.
+    """
+
+    def init_state(self, n_replicas: Optional[int] = None) -> Any: ...
+
+    def half_kick(self, vel, force, masses, dt) -> jax.Array: ...
+
+    def drift(self, pos, vel, dt, box=None) -> jax.Array: ...
+
+    def finalize(self, vel, masses, dt, state,
+                 amask=None) -> Tuple[jax.Array, Any]: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class NVE:
+    """Velocity Verlet, no thermostat — the paper's Sec. 4 protocol."""
+
+    def init_state(self, n_replicas=None):
+        del n_replicas
+        return ()
+
+    def half_kick(self, vel, force, masses, dt):
+        return integrator.verlet_half_kick(vel, force, masses, dt)
+
+    def drift(self, pos, vel, dt, box=None):
+        return integrator.verlet_drift(pos, vel, dt, box)
+
+    def finalize(self, vel, masses, dt, state, amask=None):
+        return vel, state
+
+
+@dataclasses.dataclass(frozen=True)
+class NVTLangevin(NVE):
+    """Velocity Verlet + per-step Ornstein-Uhlenbeck velocity mixing.
+
+    After the second half-kick: ``v <- c v + sqrt(1-c^2) sqrt(kT/m) xi``
+    with ``c = exp(-friction dt)`` — the exact OU solution, so any friction
+    is stable. ``friction == 0`` is a STATIC Python branch that skips the
+    O-step entirely: the scanned program is op-identical to NVE (bit-exact
+    trajectories, guarded by tests). The RNG key rides in the ensemble
+    state; distributed, ``init_state(n_slabs)`` folds the slab index into
+    the seed so slabs draw independent noise.
+    """
+
+    temp_k: float = 330.0
+    friction: float = 0.1        # 1/fs
+    seed: int = 0
+
+    def init_state(self, n_replicas=None):
+        key = jax.random.PRNGKey(self.seed)
+        if n_replicas is None:
+            return {"key": key}
+        return {"key": jax.vmap(lambda i: jax.random.fold_in(key, i))(
+            jnp.arange(n_replicas))}
+
+    def finalize(self, vel, masses, dt, state, amask=None):
+        if self.friction == 0.0:            # static: bit-exact NVE path
+            return vel, state
+        key, sub = jax.random.split(state["key"])
+        c = jnp.exp(-self.friction * dt)
+        sigma_v = jnp.sqrt(
+            integrator.KB_EV * self.temp_k / masses * integrator.FORCE_TO_ACC)
+        noise = jax.random.normal(sub, vel.shape, vel.dtype) * sigma_v[:, None]
+        vel = c * vel + jnp.sqrt(1.0 - c * c) * noise
+        if amask is not None:               # padded slots must stay at rest
+            vel = vel * amask[:, None]
+        return vel, {"key": key}
+
+
+@dataclasses.dataclass(frozen=True)
+class BerendsenThermostat(NVE):
+    """Per-step velocity rescaling toward ``temp_k`` with time constant
+    ``tau_fs`` (weak coupling). Memoryless — the scale factor is recomputed
+    from the instantaneous temperature, so the ensemble state is empty.
+    Distributed, the rescale uses the SLAB-local temperature (each slab
+    relaxes to the same target; no cross-slab collective needed)."""
+
+    temp_k: float = 330.0
+    tau_fs: float = 100.0
+
+    def finalize(self, vel, masses, dt, state, amask=None):
+        t = integrator.temperature(vel, masses, amask)
+        lam2 = 1.0 + dt / self.tau_fs * \
+            (self.temp_k / jnp.maximum(t, 1e-6) - 1.0)
+        vel = vel * jnp.sqrt(jnp.maximum(lam2, 0.0))
+        return vel, state
+
+
+# ========================================================== Simulation API
+
+@dataclasses.dataclass(frozen=True)
+class SimulationSpec:
+    """Everything that defines a single-process MD run.
+
+    Replaces the legacy ``driver.run_md`` kwarg pile: the force model and
+    the ensemble are first-class values, so a new scenario is a new spec —
+    not an edit to the scan bodies. ``engine`` in {"outer", "scan",
+    "python"} selects the stepping machinery (see ``md/driver.py``).
+    """
+
+    potential: Potential
+    ensemble: Ensemble = NVE()
+    steps: int = 99
+    dt_fs: float = 1.0
+    temp_k: float = 330.0        # Maxwell-Boltzmann init temperature
+    rebuild_every: int = 50
+    thermo_every: int = 50
+    skin: float = 2.0
+    seed: int = 0
+    engine: str = "scan"
+    chunk_segments: int = 8
+    escalation: Optional[Any] = None    # stepper.EscalationPolicy
+
+
+class Simulation:
+    """Entry point: ``Simulation(spec).run(params, pos, typ, box)``.
+
+    >>> pot = DPPotential(cfg, impl="quintic", nsel_norm=cfg.nsel)
+    >>> sim = Simulation(SimulationSpec(pot, NVTLangevin(330.0, 0.05)))
+    >>> result = sim.run(params, pos, typ, box)
+    """
+
+    def __init__(self, spec: SimulationSpec):
+        self.spec = spec
+
+    def run(self, params: Any, pos, typ, box):
+        from repro.md import driver
+        return driver.run_simulation(self.spec, params, pos, typ, box)
+
+
+# ========================================================= CLI registries
+
+POTENTIAL_CHOICES = ("dp", "quintic", "cheb", "lj")
+ENSEMBLE_CHOICES = ("nve", "nvt_langevin", "berendsen")
+
+
+def make_potential(name: str, cfg: Optional[DPConfig] = None,
+                   impl: Optional[str] = None, **lj_kw) -> Potential:
+    """Build a Potential from a CLI name.
+
+    "dp" wraps ``cfg`` (optionally with an explicit ``impl`` rung);
+    "quintic"/"cheb" are tabulated DP; "lj" takes :class:`LJPotential`
+    keyword overrides and needs no DP config at all.
+    """
+    if name == "lj":
+        return LJPotential(**lj_kw)
+    if cfg is None:
+        raise ValueError(f"potential {name!r} needs a DPConfig")
+    if name == "dp":
+        # a tabulated impl needs the adapter that OWNS the table params —
+        # a plain DPPotential would init MLP params its evaluator can't use
+        if impl in ("quintic", "cheb", "cheb_pallas"):
+            kind = "quintic" if impl == "quintic" else "cheb"
+            return TabulatedDPPotential(cfg, impl=impl, nsel_norm=cfg.nsel,
+                                        kind=kind)
+        return DPPotential(cfg, impl=impl, nsel_norm=cfg.nsel)
+    if name in ("quintic", "cheb"):
+        return TabulatedDPPotential(cfg, kind=name, nsel_norm=cfg.nsel)
+    raise ValueError(f"unknown potential {name!r} "
+                     f"(choices: {POTENTIAL_CHOICES})")
+
+
+def make_ensemble(name: str, temp_k: float = 330.0, friction: float = 0.1,
+                  tau_fs: float = 100.0, seed: int = 0) -> Ensemble:
+    """Build an Ensemble from a CLI name."""
+    if name == "nve":
+        return NVE()
+    if name == "nvt_langevin":
+        return NVTLangevin(temp_k=temp_k, friction=friction, seed=seed)
+    if name == "berendsen":
+        return BerendsenThermostat(temp_k=temp_k, tau_fs=tau_fs)
+    raise ValueError(f"unknown ensemble {name!r} "
+                     f"(choices: {ENSEMBLE_CHOICES})")

@@ -32,16 +32,15 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 try:                                         # jax >= 0.5 public API
     from jax import shard_map as _shard_map
 except ImportError:                          # jax 0.4.x
     from jax.experimental.shard_map import shard_map as _shard_map
 
-from repro.core import dp_model
 from repro.core.types import DPConfig
-from repro.md import integrator, neighbors
+from repro.md import api, integrator, neighbors
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
@@ -231,27 +230,38 @@ def make_local_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
                        spatial_axis="data",
                        model_axis: str = "model",
                        decomp: str = "slots",
-                       neighbor: str = "brute"):
+                       neighbor: str = "brute",
+                       potential: Optional[api.Potential] = None,
+                       ensemble: Optional[api.Ensemble] = None):
     """Per-shard MD step body — the code that runs INSIDE shard_map.
 
-    Returns ``step_local(params, pos, vel, typ, mask) ->
-    ((pos, vel, typ, mask), thermo)`` on squeezed per-slab arrays. Fully
-    traceable (halo exchange, rebuild, force, Verlet — no host branches), so
-    it embeds equally in the per-segment engine
+    Returns ``step_local(params, pos, vel, typ, mask, ens) ->
+    ((pos, vel, typ, mask, ens), thermo)`` on squeezed per-slab arrays.
+    Fully traceable (halo exchange, rebuild, force, integration — no host
+    branches), so it embeds equally in the per-segment engine
     (:func:`make_distributed_md_step`) and in the whole-trajectory two-level
     scan (:func:`make_outer_md_program`).
 
+    The step is closed over a ``(potential, ensemble)`` pair from the
+    composable API (``md/api.py``); ``cfg``/``impl`` remain as the legacy
+    spelling for DP + NVE (``potential=None`` wraps them in a
+    :class:`api.DPPotential`). The ensemble's extra state ``ens`` (RNG key,
+    ...) rides in the scan carry next to the slab arrays.
+
     decomp:
       "slots" — model shards take complementary NEIGHBOR-SLOT slices of every
-                atom; partial T matrices psum-reduce (validated vs the
-                single-process reference to 1e-10).
+                atom; partial per-atom energy terms psum-reduce (for DP, the
+                partial T matrices — validated vs the single-process
+                reference to 1e-10).
       "atoms" — model shards take complementary ATOM slices of the slab
-                (search + embedding + fitting end-to-end); per-shard forces
+                (search + energy + grad end-to-end); per-shard forces
                 psum-reduce. Better balanced at production sizes and keeps
                 the neighbor search per-chip — the multi-pod MD dry-run path.
     neighbor: "brute" O(N^2) (tests) | "cells" O(N) slab cell list.
     """
     spec.validate()
+    potential = potential or api.DPPotential(cfg, impl=impl)
+    ensemble = ensemble or api.NVE()
     n_model = mesh.shape[model_axis]
     if isinstance(spatial_axis, str):
         n_spatial = mesh.shape[spatial_axis]
@@ -260,10 +270,21 @@ def make_local_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
         for a in spatial_axis:
             n_spatial *= mesh.shape[a]
     assert n_spatial == spec.n_slabs, (n_spatial, spec.n_slabs)
-    cfg_p = pad_sel_for(cfg, n_model)
-    # per-shard slice config: each model shard sees 1/n_model of each section
-    cfg_local = dataclasses.replace(
-        cfg_p, sel=tuple(s // n_model for s in cfg_p.sel))
+    # the neighbor search only reaches rcut_halo: a potential with a larger
+    # cutoff would silently lose every pair beyond it (no flag fires)
+    assert potential.rcut <= spec.rcut_halo + 1e-6, (
+        f"potential rcut {potential.rcut} exceeds DomainSpec.rcut_halo "
+        f"{spec.rcut_halo}: pairs past the halo cutoff would be silently "
+        f"dropped")
+    # model-axis-divisible padded layout; normalization pinned to it (the
+    # pre-API behavior: distributed DP normalizes by the PADDED capacity)
+    sel_p = tuple(pad_sel_for(potential.layout_cfg(), n_model).sel)
+    nsel_p = int(sum(sel_p))
+    pot_p = potential.with_layout(sel_p, nsel_norm=nsel_p)
+    # per-shard slice layout: each model shard sees 1/n_model of each section
+    pot_local = pot_p.with_layout(tuple(s // n_model for s in sel_p),
+                                  nsel_norm=nsel_p)
+    cfg_layout = pot_p.layout_cfg()
     rc2 = float(spec.rcut_halo) ** 2
     mass_table = jnp.asarray(masses, jnp.float32)
     # min-image applies to y/z only: x periodicity is ghost-resolved, and a
@@ -277,20 +298,20 @@ def make_local_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
     if neighbor == "cells":
         from repro.md import slab_cells
         nbr_fn = slab_cells.make_slab_neighbor_fn(
-            cfg_p, spec.box, spec.slab_width, spec.rcut_halo, n_centers)
+            cfg_layout, spec.box, spec.slab_width, spec.rcut_halo, n_centers)
 
     def slot_energy(pos_all, nlist_slice, typ_all, mask_local, params):
         """Sum of local-atom energies from a neighbor-slot SLICE; psum over
-        the model axis completes the T matrices (neighbor decomposition)."""
+        the model axis completes the per-atom terms (neighbor
+        decomposition)."""
         n_local = mask_local.shape[0]
         nmask = nlist_slice >= 0
         j = jnp.maximum(nlist_slice, 0)
         rij = pos_all[j] - pos_all[:n_local, None, :]
         rij = rij - box * jnp.round(rij / box)
         rij = jnp.where(nmask[..., None], rij, 0.0)
-        e_i = dp_model.dp_atomic_energy(
-            params, cfg_local, rij, nmask, typ_all[:n_local], impl=impl,
-            axis_name=model_axis, nsel_norm=cfg_p.nsel)
+        e_i = pot_local.atomic_energy(params, rij, nmask, typ_all[:n_local],
+                                      axis_name=model_axis)
         return jnp.sum(e_i * mask_local)
 
     def atoms_energy(pos_all, nlist, typ_centers, mask_centers, start, params):
@@ -301,11 +322,10 @@ def make_local_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
         rij = pos_all[j] - centers[:, None, :]
         rij = rij - box * jnp.round(rij / box)
         rij = jnp.where(nmask[..., None], rij, 0.0)
-        e_i = dp_model.dp_atomic_energy(
-            params, cfg_p, rij, nmask, typ_centers, impl=impl)
+        e_i = pot_p.atomic_energy(params, rij, nmask, typ_centers)
         return jnp.sum(e_i * mask_centers)
 
-    def step_local(params, pos, vel, typ, mask):
+    def step_local(params, pos, vel, typ, mask, ens):
         cap = pos.shape[0]
         idx_s = jax.lax.axis_index(spatial_axis)
         slab_lo = idx_s.astype(jnp.float32) * spec.slab_width
@@ -325,7 +345,7 @@ def make_local_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
                                       start)
             else:
                 nlist_full, n_ovf = _slab_neighbors(
-                    pos_all, typ_all, mask_all, cfg_p, rc2, cap, box)
+                    pos_all, typ_all, mask_all, cfg_layout, rc2, cap, box)
                 nlist = jax.lax.dynamic_slice_in_dim(
                     nlist_full, start, n_centers, 0)
             typ_c = jax.lax.dynamic_slice_in_dim(typ, start, n_centers, 0)
@@ -346,9 +366,9 @@ def make_local_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
                 nlist, n_ovf = nbr_fn(pos_all, typ_all, mask_all, slab_lo, 0)
             else:
                 nlist, n_ovf = _slab_neighbors(pos_all, typ_all, mask_all,
-                                               cfg_p, rc2, cap, box)
+                                               cfg_layout, rc2, cap, box)
             parts = []
-            for (a, b) in cfg_p.sel_sections():
+            for (a, b) in cfg_layout.sel_sections():
                 w = (b - a) // n_model
                 parts.append(jax.lax.dynamic_slice_in_dim(
                     nlist, a + jax.lax.axis_index(model_axis) * w, w, axis=1))
@@ -369,11 +389,12 @@ def make_local_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
             # model axis holds complementary neighbor slices: reduce forces.
             force = jax.lax.psum(force, model_axis)
 
-        # -- velocity Verlet (kick-drift-kick with fresh forces) ------------
-        m = mass_table[typ][:, None]
-        vel = vel + 0.5 * dt_fs * integrator.FORCE_TO_ACC * force / m
-        pos = pos + dt_fs * vel
-        vel = vel + 0.5 * dt_fs * integrator.FORCE_TO_ACC * force / m
+        # -- ensemble step (kick-drift-kick + thermostat finalize) ----------
+        m_vec = mass_table[typ]
+        vel = ensemble.half_kick(vel, force, m_vec, dt_fs)
+        pos = ensemble.drift(pos, vel, dt_fs, None)
+        vel = ensemble.half_kick(vel, force, m_vec, dt_fs)
+        vel, ens = ensemble.finalize(vel, m_vec, dt_fs, ens, amask=mask)
         # keep x within the global box (y, z wrap via min-image in rij)
         pos = jnp.where(mask[:, None], pos, 0.0)
 
@@ -386,7 +407,7 @@ def make_local_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
             "halo_overflow": jax.lax.pmax(h_ovf, spatial_axis),
             "nbr_overflow": jax.lax.pmax(n_ovf, spatial_axis),
         }
-        return (pos, vel, typ, mask), thermo
+        return (pos, vel, typ, mask, ens), thermo
 
     return step_local
 
@@ -399,35 +420,57 @@ def _state_pspec(spatial_axis) -> SlabState:
 THERMO_KEYS = ("pe", "ke", "n_atoms", "halo_overflow", "nbr_overflow")
 
 
+def init_ensemble_state(ensemble: api.Ensemble, n_slabs: int, mesh: Mesh,
+                        spatial_axis="data"):
+    """Stacked per-slab ensemble state, device_put sharded over the slabs.
+
+    Stateless ensembles return an empty pytree (zero overhead); stateful
+    ones (Langevin) get one state per slab with the slab index folded into
+    the RNG seed, so slabs draw independent noise streams.
+    """
+    ens = ensemble.init_state(n_slabs)
+    sh = NamedSharding(mesh, P(spatial_axis))
+    return jax.tree.map(lambda x: jax.device_put(x, sh), ens)
+
+
 def make_distributed_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
                              masses: Tuple[float, ...], dt_fs: float,
                              impl: Optional[str] = None,
                              spatial_axis="data",
                              model_axis: str = "model",
                              decomp: str = "slots",
-                             neighbor: str = "brute"):
-    """Build the shard_map'd (params, SlabState) -> (SlabState, thermo) step.
+                             neighbor: str = "brute",
+                             potential: Optional[api.Potential] = None,
+                             ensemble: Optional[api.Ensemble] = None):
+    """Build the shard_map'd ``(params, SlabState, ens) ->
+    ((SlabState, ens), thermo)`` step.
 
-    The returned function expects SlabState leaves stacked over slabs and
-    sharded P(spatial_axis) on dim 0; params replicated. See
-    :func:`make_local_md_step` for the decomp / neighbor options.
+    The returned function expects SlabState (and ensemble-state) leaves
+    stacked over slabs and sharded P(spatial_axis) on dim 0; params
+    replicated. ``ens`` comes from :func:`init_ensemble_state` (an empty
+    pytree for stateless ensembles). See :func:`make_local_md_step` for the
+    potential/ensemble/decomp/neighbor options.
     """
     step_local = make_local_md_step(
         cfg, spec, mesh, masses, dt_fs, impl=impl, spatial_axis=spatial_axis,
-        model_axis=model_axis, decomp=decomp, neighbor=neighbor)
+        model_axis=model_axis, decomp=decomp, neighbor=neighbor,
+        potential=potential, ensemble=ensemble)
 
-    def step(params, state: SlabState):
+    def step(params, state: SlabState, ens):
         # shard_map keeps the sharded slab dim at local size 1 — squeeze it.
         pos, vel, typ, mask = (x[0] for x in state)
-        (pos, vel, typ, mask), thermo = step_local(params, pos, vel, typ, mask)
+        ens_l = jax.tree.map(lambda x: x[0], ens)
+        (pos, vel, typ, mask, ens_l), thermo = step_local(
+            params, pos, vel, typ, mask, ens_l)
         new_state = SlabState(pos=pos[None], vel=vel[None], typ=typ[None],
                               mask=mask[None])
-        return new_state, thermo
+        return (new_state, jax.tree.map(lambda x: x[None], ens_l)), thermo
 
     state_spec = _state_pspec(spatial_axis)
     thermo_spec = {k: P() for k in THERMO_KEYS}
-    return shard_map(step, mesh=mesh, in_specs=(P(), state_spec),
-                     out_specs=(state_spec, thermo_spec),
+    return shard_map(step, mesh=mesh,
+                     in_specs=(P(), state_spec, P(spatial_axis)),
+                     out_specs=((state_spec, P(spatial_axis)), thermo_spec),
                      check_vma=False)
 
 
@@ -436,22 +479,24 @@ def make_distributed_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
 def make_segment_runner(step_fn, donate: Optional[bool] = None):
     """Run the shard_map'd MD step through the shared segment engine.
 
-    ``step_fn`` is the ``(params, SlabState) -> (SlabState, thermo)`` step
-    from :func:`make_distributed_md_step`. The returned callable
-    ``run(state, params, n_steps)`` executes ``n_steps`` steps as ONE jitted
-    ``lax.scan`` dispatch (thermo comes back stacked ``(n_steps,)``), so the
-    host touches the device once per rebuild/migration segment — the same
-    engine the single-process driver uses, keeping halo-exchange cadence
-    (per step, inside the scan) and migration cadence (per segment, outside)
-    aligned by construction.
+    ``step_fn`` is the ``(params, SlabState, ens) -> ((SlabState, ens),
+    thermo)`` step from :func:`make_distributed_md_step`. The returned
+    callable ``run(state, params, n_steps, ens=())`` executes ``n_steps``
+    steps as ONE jitted ``lax.scan`` dispatch over the ``(state, ens)``
+    carry (thermo comes back stacked ``(n_steps,)``) and returns
+    ``((state, ens), thermo)`` — the host touches the device once per
+    rebuild/migration segment, the same engine the single-process driver
+    uses, keeping halo-exchange cadence (per step, inside the scan) and
+    migration cadence (per segment, outside) aligned by construction.
     """
     from repro.md import stepper
 
     engine = stepper.SegmentEngine(
-        lambda state, params: step_fn(params, state), donate=donate)
+        lambda carry, params: step_fn(params, carry[0], carry[1]),
+        donate=donate)
 
-    def run(state: SlabState, params, n_steps: int):
-        return engine.run(state, n_steps, params)
+    def run(state: SlabState, params, n_steps: int, ens=()):
+        return engine.run((state, ens), n_steps, params)
 
     return run
 
@@ -613,13 +658,14 @@ def make_migration_step(spec: DomainSpec, mesh: Mesh,
 class OuterMDProgram:
     """Distributed MD with migration + rebuild folded into ONE program.
 
-    ``run(state, params, n_segments, seg_len)`` executes
+    ``run(state, params, n_segments, seg_len, ens)`` executes
     ``n_segments x seg_len`` steps as a single jitted shard_map dispatch: a
     two-level ``lax.scan`` per shard — outer over segments (each segment
     starts with scan-safe migration, then the halo-exchange + rebuild +
-    Verlet step scanned ``seg_len`` times inside). Host round-trips drop
-    from one per segment to one per chunk; overflow flags (halo, neighbor,
-    migration) come back stacked in the thermo fetch and are checked by
+    ensemble step scanned ``seg_len`` times inside; the ensemble's extra
+    state rides in the carry). Host round-trips drop from one per segment
+    to one per chunk; overflow flags (halo, neighbor, migration) come back
+    stacked in the thermo fetch and are checked by
     :func:`check_segment_thermo` once per chunk.
 
     Jitted programs are cached per ``(n_segments, seg_len)``; ``build``
@@ -631,11 +677,14 @@ class OuterMDProgram:
                  masses: Tuple[float, ...], dt_fs: float,
                  impl: Optional[str] = None, spatial_axis="data",
                  model_axis: str = "model", decomp: str = "atoms",
-                 neighbor: str = "cells", donate: Optional[bool] = None):
+                 neighbor: str = "cells", donate: Optional[bool] = None,
+                 potential: Optional[api.Potential] = None,
+                 ensemble: Optional[api.Ensemble] = None):
         self._step_local = make_local_md_step(
             cfg, spec, mesh, masses, dt_fs, impl=impl,
             spatial_axis=spatial_axis, model_axis=model_axis, decomp=decomp,
-            neighbor=neighbor)
+            neighbor=neighbor, potential=potential, ensemble=ensemble)
+        self.ensemble = ensemble or api.NVE()
         self._spec = spec
         self._mesh = mesh
         self._spatial_axis = spatial_axis
@@ -647,47 +696,63 @@ class OuterMDProgram:
         self.thermo_pspec = {**{k: P() for k in THERMO_KEYS},
                              "mig_overflow": P()}
 
+    def init_ensemble_state(self):
+        """Sharded per-slab ensemble state for :meth:`run` (empty pytree
+        for stateless ensembles)."""
+        return init_ensemble_state(self.ensemble, self._spec.n_slabs,
+                                   self._mesh, self._spatial_axis)
+
     def build(self, n_segments: int, seg_len: int):
-        """The un-jitted shard_map'd ``(params, state) -> (state, thermo)``.
+        """The un-jitted shard_map'd ``(params, state, ens) ->
+        (state, ens, thermo)``.
 
         thermo leaves are stacked ``(n_segments, seg_len)`` (psum'd scalars
-        per step) plus ``mig_overflow`` stacked ``(n_segments,)``.
+        per step) plus ``mig_overflow`` stacked ``(n_segments,)``. The
+        ensemble state threads through BOTH scan levels in the carry.
         """
         spec, spatial_axis = self._spec, self._spatial_axis
         step_local = self._step_local
 
-        def program(params, state: SlabState):
+        def program(params, state: SlabState, ens):
             pos, vel, typ, mask = (x[0] for x in state)
+            ens_l = jax.tree.map(lambda x: x[0], ens)
 
             def seg_body(st, _):
-                st, m_ovf = _migrate_local(*st, spec, spatial_axis)
+                pos, vel, typ, mask, e = st
+                (pos, vel, typ, mask), m_ovf = _migrate_local(
+                    pos, vel, typ, mask, spec, spatial_axis)
 
                 def step_body(s, _):
                     return step_local(params, *s)
 
-                st, th = jax.lax.scan(step_body, st, None, length=seg_len)
+                st, th = jax.lax.scan(step_body, (pos, vel, typ, mask, e),
+                                      None, length=seg_len)
                 th["mig_overflow"] = jax.lax.pmax(m_ovf, spatial_axis)
                 return st, th
 
-            (pos, vel, typ, mask), th = jax.lax.scan(
-                seg_body, (pos, vel, typ, mask), None, length=n_segments)
+            (pos, vel, typ, mask, ens_l), th = jax.lax.scan(
+                seg_body, (pos, vel, typ, mask, ens_l), None,
+                length=n_segments)
             new_state = SlabState(pos=pos[None], vel=vel[None], typ=typ[None],
                                   mask=mask[None])
-            return new_state, th
+            return new_state, jax.tree.map(lambda x: x[None], ens_l), th
 
         return shard_map(program, mesh=self._mesh,
-                         in_specs=(P(), self.state_pspec),
-                         out_specs=(self.state_pspec, self.thermo_pspec),
+                         in_specs=(P(), self.state_pspec, P(spatial_axis)),
+                         out_specs=(self.state_pspec, P(spatial_axis),
+                                    self.thermo_pspec),
                          check_vma=False)
 
-    def run(self, state: SlabState, params, n_segments: int, seg_len: int):
+    def run(self, state: SlabState, params, n_segments: int, seg_len: int,
+            ens=()):
+        """One jitted dispatch; returns ``(state, ens, thermo)``."""
         key = (n_segments, seg_len)
         fn = self._jits.get(key)
         if fn is None:
             fn = jax.jit(self.build(n_segments, seg_len),
                          donate_argnums=(1,) if self._donate else ())
             self._jits[key] = fn
-        return fn(params, state)
+        return fn(params, state, ens)
 
 
 def make_outer_md_program(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,

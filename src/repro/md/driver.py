@@ -1,8 +1,13 @@
-"""Single-process MD driver reproducing the paper's protocol (Sec. 4):
+"""Single-process MD driver reproducing the paper's protocol (Sec. 4).
 
-Velocity-Verlet NVE, Maxwell-Boltzmann init at 330 K, neighbor list with a
-2 A buffer rebuilt every 50 steps, thermo (KE/PE/T) recorded every 50 steps.
-99 steps => energy and forces evaluated 100 times.
+The run is described by a :class:`repro.md.api.SimulationSpec` — a
+``Potential`` (DP at any implementation rung, tabulated DP, analytic LJ),
+an ``Ensemble`` (NVE Verlet, Langevin, Berendsen) and the protocol scalars
+— and executed by :func:`run_simulation` (what ``api.Simulation.run``
+calls). The default protocol is the paper's: Velocity-Verlet NVE,
+Maxwell-Boltzmann init at 330 K, neighbor list with a 2 A buffer rebuilt
+every 50 steps, thermo recorded every 50 steps; 99 steps => energy and
+forces evaluated 100 times.
 
 Three stepping engines share this entry point:
 
@@ -22,6 +27,9 @@ Three stepping engines share this entry point:
 The engines agree on the physics: within the skin buffer every pair inside
 rcut is in both lists and pairs beyond rcut contribute exactly zero, so the
 only divergence is floating-point summation order.
+
+``run_md`` remains as a DEPRECATED thin shim over the spec API; for
+NVE + DP it stays bit-exact with ``Simulation.run`` (guarded by tests).
 """
 
 from __future__ import annotations
@@ -35,9 +43,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dp_model
 from repro.core.types import DPConfig
-from repro.md import integrator, lattice, neighbors, stepper
+from repro.md import api, integrator, lattice, neighbors, stepper
 
 
 @dataclasses.dataclass
@@ -51,6 +58,8 @@ class MDResult:
     engine: str = "scan"
     escalations: int = 0          # neighbor capacity escalations taken
     host_syncs: int = 0           # device->host round-trips in the hot loop
+    overflow_checks: int = 0      # neighbor-overflow flags inspected
+    overflow_worst: int = 0       # worst flag seen (<= 0: slot slack left)
 
     @property
     def us_per_step_atom(self) -> float:
@@ -58,14 +67,15 @@ class MDResult:
 
 
 @functools.lru_cache(maxsize=None)
-def _kick_drift_jit():
-    """Seed loop's jitted first half-step (module-level so the compile is
-    cached across ``run_md`` calls — steady-state benchmark fairness)."""
+def _kick_drift_jit(ensemble: api.Ensemble):
+    """Seed loop's jitted first half-step, cached per (hashable) ensemble
+    so the compile is reused across ``run_simulation`` calls — steady-state
+    benchmark fairness."""
 
     @jax.jit
     def kick_drift(pos, vel, f, masses, dt, box):
-        vel = integrator.verlet_half_kick(vel, f, masses, dt)
-        pos = integrator.verlet_drift(pos, vel, dt, box)
+        vel = ensemble.half_kick(vel, f, masses, dt)
+        pos = ensemble.drift(pos, vel, dt, box)
         return pos, vel
 
     return kick_drift
@@ -77,109 +87,159 @@ def run_md(cfg: DPConfig, params: Any, pos: np.ndarray, typ: np.ndarray,
            thermo_every: int = 50, skin: float = 2.0,
            impl: Optional[str] = None, seed: int = 0,
            engine: str = "scan", chunk_segments: int = 8,
-           escalation: Optional[stepper.EscalationPolicy] = None) -> MDResult:
-    if engine not in ("outer", "scan", "python"):
-        raise ValueError(f"unknown engine {engine!r}")
+           escalation: Optional[stepper.EscalationPolicy] = None,
+           potential: Optional[api.Potential] = None,
+           ensemble: Optional[api.Ensemble] = None) -> MDResult:
+    """DEPRECATED kwarg-pile entry point; thin shim over the spec API.
+
+    Build an :class:`api.SimulationSpec` and call ``api.Simulation.run``
+    instead. The shim constructs exactly that spec (a ``DPPotential``
+    pinned to ``cfg.nsel`` + NVE unless ``potential``/``ensemble``
+    override), so NVE + DP trajectories are bit-identical between the two
+    entry points — guarded by ``tests/test_api.py``.
+    """
+    spec = api.SimulationSpec(
+        potential=potential or api.DPPotential(cfg, impl=impl,
+                                               nsel_norm=cfg.nsel),
+        ensemble=ensemble or api.NVE(),
+        steps=steps, dt_fs=dt_fs, temp_k=temp_k,
+        rebuild_every=rebuild_every, thermo_every=thermo_every, skin=skin,
+        seed=seed, engine=engine, chunk_segments=chunk_segments,
+        escalation=escalation)
+    return run_simulation(spec, params, pos, typ, box)
+
+
+def run_simulation(spec: api.SimulationSpec, params: Any, pos: np.ndarray,
+                   typ: np.ndarray, box: np.ndarray) -> MDResult:
+    """Run ``spec`` on ``(params, pos, typ, box)`` — the one MD entry point.
+
+    The potential supplies the neighbor-list layout (``sel``/``rcut``) and
+    the force evaluation; the ensemble supplies the integration step and
+    its extra state (which rides in the scan carry). Engine selection and
+    the capacity-escalation fault tolerance are exactly as documented in
+    the module docstring.
+    """
+    if spec.engine not in ("outer", "scan", "python"):
+        raise ValueError(f"unknown engine {spec.engine!r}")
+    pot, ens_obj = spec.potential, spec.ensemble
     n = len(pos)
-    masses = jnp.asarray(lattice.masses_for(cfg.type_map, np.asarray(typ)))
-    spec = neighbors.NeighborSpec(rcut_nbr=cfg.rcut + skin, sel=cfg.sel)
+    masses = jnp.asarray(lattice.masses_for(pot.type_map, np.asarray(typ)))
+    nspec = neighbors.NeighborSpec(rcut_nbr=pot.rcut + spec.skin,
+                                   sel=pot.sel)
     box_np = np.asarray(box, float)
 
     pos = jnp.asarray(pos, jnp.float32)
     typ = jnp.asarray(typ, jnp.int32)
     boxj = jnp.asarray(box, jnp.float32)
-    vel = integrator.init_velocities(jax.random.PRNGKey(seed), masses, temp_k)
+    vel = integrator.init_velocities(jax.random.PRNGKey(spec.seed), masses,
+                                     spec.temp_k)
 
-    if engine == "python":
-        return _run_md_python(cfg, params, pos, vel, typ, boxj, box_np,
-                              masses, spec, steps=steps, dt_fs=dt_fs,
-                              rebuild_every=rebuild_every,
-                              thermo_every=thermo_every, impl=impl)
+    if spec.engine == "python":
+        return _run_md_python(pot, ens_obj, params, pos, vel, typ, boxj,
+                              box_np, masses, nspec, steps=spec.steps,
+                              dt_fs=spec.dt_fs,
+                              rebuild_every=spec.rebuild_every,
+                              thermo_every=spec.thermo_every)
 
     # ------------------------------------- fused on-device paths (scan/outer)
     build = stepper.build_neighbors_escalating(
-        cfg, spec, box_np, pos, typ, escalation)
+        pot.layout_cfg(), nspec, box_np, pos, typ, spec.escalation)
     escalations = build.escalations
-    _, f, _ = dp_model.dp_energy_forces(
-        params, build.cfg_run, pos, build.nlist, typ, boxj, impl=impl,
-        nsel_norm=cfg.nsel)
+    overflow_checks = build.escalations + 1
+    overflow_worst = build.overflow
+    pot_run = pot.with_layout(build.spec.sel)
+    _, f, _ = pot_run.energy_forces(params, pos, typ, build.nlist, box=boxj)
 
-    if engine == "outer":
-        return _run_md_outer(cfg, params, pos, vel, f, typ, boxj, box_np,
-                             masses, build, steps=steps, dt_fs=dt_fs,
-                             rebuild_every=rebuild_every,
-                             thermo_every=thermo_every,
-                             chunk_segments=chunk_segments, impl=impl,
-                             escalation=escalation,
+    if spec.engine == "outer":
+        return _run_md_outer(pot, ens_obj, params, pos, vel, f, typ, boxj,
+                             box_np, masses, build, steps=spec.steps,
+                             dt_fs=spec.dt_fs,
+                             rebuild_every=spec.rebuild_every,
+                             thermo_every=spec.thermo_every,
+                             chunk_segments=spec.chunk_segments,
+                             escalation=spec.escalation,
                              escalations0=escalations)
 
-    eng = stepper.vv_segment_engine(build.cfg_run, impl, cfg.nsel)
-    carry = stepper.VVCarry(pos, vel, f)
+    eng = stepper.md_segment_engine(pot_run, ens_obj)
+    carry = stepper.MDCarry(pos, vel, f, ens_obj.init_state())
 
     thermo: List[Dict[str, float]] = []
     host_syncs = 1                      # initial build's overflow check
     t0 = time.time()
     step_base = 0
-    for seg_len in stepper.segment_schedule(steps, rebuild_every):
+    for seg_len in stepper.segment_schedule(spec.steps, spec.rebuild_every):
         if step_base > 0:
             # segment boundary: rebuild the list at current positions; the
             # overflow check + escalation retry lives inside (one host sync
             # per segment, not per step).
             build = stepper.build_neighbors_escalating(
-                cfg, build.spec, box_np, carry.pos, typ, escalation)
+                pot.layout_cfg(), build.spec, box_np, carry.pos, typ,
+                spec.escalation)
             host_syncs += 1
+            overflow_checks += build.escalations + 1
+            overflow_worst = max(overflow_worst, build.overflow)
             if build.escalations:
                 escalations += build.escalations
-                eng = stepper.vv_segment_engine(build.cfg_run, impl, cfg.nsel)
+                pot_run = pot.with_layout(build.spec.sel)
+                eng = stepper.md_segment_engine(pot_run, ens_obj)
         carry, th = eng.run(carry, seg_len, params, build.nlist, typ, boxj,
-                            masses, dt_fs)
+                            masses, spec.dt_fs)
         # ONE device->host sync per segment fetches the stacked thermo.
         thermo.extend(stepper.thermo_rows(
-            np.asarray(th["pe"]), np.asarray(th["ke"]), step_base, steps,
-            thermo_every, n))
+            np.asarray(th["pe"]), np.asarray(th["ke"]), step_base,
+            spec.steps, spec.thermo_every, n))
         host_syncs += 1
         step_base += seg_len
     carry.pos.block_until_ready()
     wall = time.time() - t0
     return MDResult(thermo=thermo, final_pos=np.asarray(carry.pos),
                     final_vel=np.asarray(carry.vel), wall_s=wall,
-                    steps=steps, n_atoms=n, engine="scan",
-                    escalations=escalations, host_syncs=host_syncs)
+                    steps=spec.steps, n_atoms=n, engine="scan",
+                    escalations=escalations, host_syncs=host_syncs,
+                    overflow_checks=overflow_checks,
+                    overflow_worst=overflow_worst)
 
 
-def _run_md_outer(cfg, params, pos, vel, f, typ, boxj, box_np, masses,
+def _run_md_outer(pot: api.Potential, ens_obj: api.Ensemble, params, pos,
+                  vel, f, typ, boxj, box_np, masses,
                   build: stepper.NeighborBuild, *, steps, dt_fs,
-                  rebuild_every, thermo_every, chunk_segments, impl,
+                  rebuild_every, thermo_every, chunk_segments,
                   escalation, escalations0):
     """Whole-trajectory two-level scan: rebuild folded into the program.
 
     Chunks of ``chunk_segments`` rebuild segments run as ONE jitted
     ``lax.scan`` over segments (each segment: on-device neighbor rebuild at
-    current positions, then ``rebuild_every`` Verlet steps scanned inside).
-    The host touches the device once per chunk: the accumulated overflow
-    flag (+ the chunk's stacked thermo ride along in the same fetch). On
+    current positions, then ``rebuild_every`` MD steps scanned inside). The
+    host touches the device once per chunk: the accumulated overflow flag
+    (+ the chunk's stacked thermo ride along in the same fetch). On
     overflow the rebuilt list silently truncated inside the trace, so the
     whole chunk is REPLAYED from its entry snapshot with geometrically
     escalated capacities — the segment engine's escalation policy applied
-    at chunk granularity (physics pinned by ``nsel_norm=cfg.nsel``).
+    at chunk granularity (physics pinned by the potential's layout
+    re-targeting). The ensemble state (RNG key, ...) rides in the carry —
+    and in the snapshot, so a replayed chunk re-draws the same noise.
     """
     policy = escalation or stepper.EscalationPolicy()
     n = pos.shape[0]
     box_key = tuple(float(b) for b in np.asarray(box_np).reshape(-1))
-    spec, cfg_run = build.spec, build.cfg_run
+    spec_n = build.spec
+    pot_run = pot.with_layout(spec_n.sel)
     donate = stepper.default_donate()
-    carry = stepper.OuterCarry(pos, vel, f, jnp.zeros((), jnp.int32))
+    carry = stepper.OuterCarry(pos, vel, f, jnp.zeros((), jnp.int32),
+                               ens_obj.init_state())
 
     thermo: List[Dict[str, float]] = []
     escalations = escalations0
     host_syncs = 1                      # initial build's overflow check
+    overflow_checks = escalations0 + 1
+    overflow_worst = build.overflow
     t0 = time.time()
     step_base = 0
     for n_segs, seg_len in stepper.chunk_schedule(steps, rebuild_every,
                                                   chunk_segments):
         for _ in range(policy.max_attempts + 1):
-            eng = stepper.vv_outer_engine(cfg_run, impl, cfg.nsel, spec,
-                                          box_key, donate)
+            eng = stepper.md_outer_engine(pot_run, ens_obj, spec_n, box_key,
+                                          donate)
             # Chunk-entry snapshot for the escalation replay. Without
             # donation the input carry stays valid — keeping the reference
             # is free. With donation the inputs are consumed by the run, so
@@ -190,22 +250,25 @@ def _run_md_outer(cfg, params, pos, vel, f, typ, boxj, box_np, masses,
                               masses, dt_fs)
             ovf = int(out.overflow)     # THE host sync for this chunk
             host_syncs += 1
+            overflow_checks += 1
+            overflow_worst = max(overflow_worst, ovf)
             if ovf <= 0:
                 carry = out
                 break
-            spec = dataclasses.replace(
-                spec, sel=tuple(policy.grow(s) for s in spec.sel),
-                cell_capacity=policy.grow(spec.cell_capacity))
-            cfg_run = dataclasses.replace(cfg_run, sel=tuple(spec.sel))
+            spec_n = dataclasses.replace(
+                spec_n, sel=tuple(policy.grow(s) for s in spec_n.sel),
+                cell_capacity=policy.grow(spec_n.cell_capacity))
+            pot_run = pot.with_layout(spec_n.sel)
             escalations += 1
             carry = stepper.OuterCarry(
                 jnp.asarray(snap.pos), jnp.asarray(snap.vel),
-                jnp.asarray(snap.force), jnp.zeros((), jnp.int32))
+                jnp.asarray(snap.force), jnp.zeros((), jnp.int32),
+                jax.tree.map(jnp.asarray, snap.ens))
         else:
             raise RuntimeError(
                 f"neighbor capacity overflow persists after "
                 f"{policy.max_attempts} chunk replays (last spec: "
-                f"sel={spec.sel}, cell_capacity={spec.cell_capacity})")
+                f"sel={spec_n.sel}, cell_capacity={spec_n.cell_capacity})")
         # thermo for the whole chunk arrives stacked (n_segs, seg_len)
         thermo.extend(stepper.thermo_rows(
             np.asarray(th["pe"]).reshape(-1), np.asarray(th["ke"]).reshape(-1),
@@ -216,24 +279,33 @@ def _run_md_outer(cfg, params, pos, vel, f, typ, boxj, box_np, masses,
     return MDResult(thermo=thermo, final_pos=np.asarray(carry.pos),
                     final_vel=np.asarray(carry.vel), wall_s=wall,
                     steps=steps, n_atoms=n, engine="outer",
-                    escalations=escalations, host_syncs=host_syncs)
+                    escalations=escalations, host_syncs=host_syncs,
+                    overflow_checks=overflow_checks,
+                    overflow_worst=overflow_worst)
 
 
-def _run_md_python(cfg, params, pos, vel, typ, boxj, box_np, masses, spec, *,
-                   steps, dt_fs, rebuild_every, thermo_every, impl):
+def _run_md_python(pot: api.Potential, ens_obj: api.Ensemble, params, pos,
+                   vel, typ, boxj, box_np, masses, nspec, *, steps, dt_fs,
+                   rebuild_every, thermo_every):
     """The seed per-step loop (reference / baseline).
 
     Kept semantically identical to the seed except the per-rebuild
     ``assert int(ovf)`` — a blocking device->host sync inside the hot loop —
     is deferred: flags stay on device and are checked once after the run.
+    The deferred flags ARE surfaced in the result (``overflow_checks`` /
+    ``overflow_worst``) and ``host_syncs`` counts the real round-trips
+    (initial build + each thermo fetch + the deferred check), so the three
+    engines report comparable diagnostics.
     """
-    nbr_fn = neighbors.make_cell_list_fn(spec, box_np)
-    kick_drift = _kick_drift_jit()
+    nbr_fn = neighbors.make_cell_list_fn(nspec, box_np)
+    kick_drift = _kick_drift_jit(ens_obj)
 
     nlist, ovf = nbr_fn(pos, typ)
-    assert int(ovf) <= 0, f"neighbor overflow {int(ovf)} at init"
-    e, f, w = dp_model.dp_energy_forces(params, cfg, pos, nlist, typ, boxj,
-                                        impl=impl)
+    host_syncs = 1
+    overflow_worst = int(ovf)
+    assert overflow_worst <= 0, f"neighbor overflow {overflow_worst} at init"
+    e, f, _ = pot.energy_forces(params, pos, typ, nlist, box=boxj)
+    ens = ens_obj.init_state()
 
     thermo: List[Dict[str, float]] = []
     ovf_flags = []
@@ -243,9 +315,9 @@ def _run_md_python(cfg, params, pos, vel, typ, boxj, box_np, masses, spec, *,
         if (step + 1) % rebuild_every == 0:
             nlist, ovf = nbr_fn(pos, typ)
             ovf_flags.append(ovf)           # device scalar; no sync here
-        e, f_new, w = dp_model.dp_energy_forces(params, cfg, pos, nlist, typ,
-                                                boxj, impl=impl)
-        vel = integrator.verlet_half_kick(vel, f_new, masses, dt_fs)
+        e, f_new, _ = pot.energy_forces(params, pos, typ, nlist, box=boxj)
+        vel = ens_obj.half_kick(vel, f_new, masses, dt_fs)
+        vel, ens = ens_obj.finalize(vel, masses, dt_fs, ens)
         f = f_new
         if (step + 1) % thermo_every == 0 or step == steps - 1:
             ke = float(integrator.kinetic_energy(vel, masses))
@@ -254,11 +326,18 @@ def _run_md_python(cfg, params, pos, vel, typ, boxj, box_np, masses, spec, *,
                 "etot": float(e) + ke,
                 "temp": float(integrator.temperature(vel, masses)),
             })
+            host_syncs += 1                 # the thermo fetch
     pos.block_until_ready()
     wall = time.time() - t0
     if ovf_flags:
+        # ONE deferred fetch inspects every rebuild's flag after the run.
         worst = int(jnp.max(jnp.stack(ovf_flags)))
+        host_syncs += 1
+        overflow_worst = max(overflow_worst, worst)
         assert worst <= 0, f"neighbor overflow {worst} during run"
     return MDResult(thermo=thermo, final_pos=np.asarray(pos),
                     final_vel=np.asarray(vel), wall_s=wall, steps=steps,
-                    n_atoms=pos.shape[0], engine="python")
+                    n_atoms=pos.shape[0], engine="python",
+                    host_syncs=host_syncs,
+                    overflow_checks=len(ovf_flags) + 1,
+                    overflow_worst=overflow_worst)

@@ -23,6 +23,11 @@ Both the single-process driver (``md/driver.py``) and the distributed slab
 driver (``md/domain.py`` + ``launch/md_run.py``) run their inner loops
 through :class:`SegmentEngine`, so halo-exchange/migration cadence aligns
 with segment boundaries by construction.
+
+The scanned step bodies are generic over the composable simulation API
+(``md/api.py``): :func:`make_md_step` closes over a ``(potential,
+ensemble)`` pair, and the engine caches key on those (hashable) adapters —
+the legacy ``make_vv_step``/``vv_*_engine`` names remain as DP+NVE shims.
 """
 
 from __future__ import annotations
@@ -35,9 +40,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dp_model
 from repro.core.types import DPConfig
-from repro.md import integrator, neighbors
+from repro.md import api, integrator, neighbors
 
 
 def default_donate() -> bool:
@@ -117,6 +121,8 @@ class NeighborBuild(NamedTuple):
     cfg_run: DPConfig             # cfg with sel matching the nlist layout
     spec: neighbors.NeighborSpec  # possibly escalated
     escalations: int
+    overflow: int = 0             # worst flag seen across build attempts
+    #                               (> 0 iff escalation fired; <= 0: slack)
 
 
 @functools.lru_cache(maxsize=None)
@@ -144,12 +150,14 @@ def build_neighbors_escalating(
     policy = policy or EscalationPolicy()
     box_key = tuple(float(b) for b in np.asarray(box).reshape(-1))
     escalations = 0
+    worst = None
     for _ in range(policy.max_attempts):
         nlist, ovf = _cell_list_fn(spec, box_key)(pos, typ)
+        worst = int(ovf) if worst is None else max(worst, int(ovf))
         if int(ovf) <= 0:
             cfg_run = (cfg if tuple(spec.sel) == tuple(cfg.sel)
                        else dataclasses.replace(cfg, sel=tuple(spec.sel)))
-            return NeighborBuild(nlist, cfg_run, spec, escalations)
+            return NeighborBuild(nlist, cfg_run, spec, escalations, worst)
         spec = dataclasses.replace(
             spec,
             sel=tuple(policy.grow(s) for s in spec.sel),
@@ -161,49 +169,72 @@ def build_neighbors_escalating(
         f"cell_capacity={spec.cell_capacity})")
 
 
-# ------------------------------------------- single-process Verlet segment fn
+# --------------------------------------- single-process MD-step segment fn
 
-class VVCarry(NamedTuple):
-    """Donated scan carry of the single-process Velocity-Verlet segment."""
+class MDCarry(NamedTuple):
+    """Donated scan carry of the single-process MD segment.
+
+    ``ens`` is the ensemble's extra state (RNG key, ...); stateless
+    ensembles carry an empty pytree, which adds zero ops to the program.
+    """
     pos: jax.Array     # (N, 3) A
     vel: jax.Array     # (N, 3) A/fs
     force: jax.Array   # (N, 3) eV/A
+    ens: Any = ()      # ensemble state pytree
+
+
+#: Legacy name (pre composable-API); ``ens`` defaults keep 3-arg calls valid.
+VVCarry = MDCarry
+
+
+def make_md_step(potential: api.Potential, ensemble: api.Ensemble) -> Callable:
+    """One kick-drift-(force)-kick step of ``ensemble`` under ``potential``.
+
+    ``(MDCarry, params, nlist, typ, box, masses, dt) -> (MDCarry, thermo)``
+    — the scanned body shared by :func:`md_segment_engine` (inner loop only)
+    and :func:`md_outer_engine` (whole-trajectory two-level scan). For NVE
+    the thermostat finalize is the identity, so the program is op-identical
+    to the pre-API Velocity-Verlet step (bit-exact trajectories)."""
+
+    def md_step(carry: MDCarry, params, nlist, typ, box, masses, dt):
+        pos, vel, f, ens = carry
+        vel = ensemble.half_kick(vel, f, masses, dt)
+        pos = ensemble.drift(pos, vel, dt, box)
+        e, f_new, _ = potential.energy_forces(params, pos, typ, nlist,
+                                              box=box)
+        vel = ensemble.half_kick(vel, f_new, masses, dt)
+        vel, ens = ensemble.finalize(vel, masses, dt, ens)
+        ke = integrator.kinetic_energy(vel, masses)
+        return MDCarry(pos, vel, f_new, ens), {"pe": e, "ke": ke}
+
+    return md_step
 
 
 def make_vv_step(cfg_run: DPConfig, impl: Optional[str],
                  nsel_norm: Optional[int]) -> Callable:
-    """One full kick-drift-(force)-kick Velocity-Verlet step.
-
-    ``(VVCarry, params, nlist, typ, box, masses, dt) -> (VVCarry, thermo)``
-    — the scanned body shared by :func:`vv_segment_engine` (inner loop only)
-    and :func:`vv_outer_engine` (whole-trajectory two-level scan)."""
-
-    def vv_step(carry: VVCarry, params, nlist, typ, box, masses, dt):
-        pos, vel, f = carry
-        vel = integrator.verlet_half_kick(vel, f, masses, dt)
-        pos = integrator.verlet_drift(pos, vel, dt, box)
-        e, f_new, _ = dp_model.dp_energy_forces(
-            params, cfg_run, pos, nlist, typ, box, impl=impl,
-            nsel_norm=nsel_norm)
-        vel = integrator.verlet_half_kick(vel, f_new, masses, dt)
-        ke = integrator.kinetic_energy(vel, masses)
-        return VVCarry(pos, vel, f_new), {"pe": e, "ke": ke}
-
-    return vv_step
+    """Legacy DP + NVE step body (shim over :func:`make_md_step`)."""
+    return make_md_step(api.DPPotential(cfg_run, impl, nsel_norm), api.NVE())
 
 
 @functools.lru_cache(maxsize=None)
+def md_segment_engine(potential: api.Potential, ensemble: api.Ensemble,
+                      donate: Optional[bool] = None) -> SegmentEngine:
+    """Engine whose step is one full kick-drift-(force)-kick MD step.
+
+    Cached per (potential, ensemble) — hashable frozen adapters — so
+    repeated runs and capacity-escalation retries reuse compiled segments.
+    Everything array-valued (params, nlist, box, masses, dt) is a traced
+    aux arg.
+    """
+    return SegmentEngine(make_md_step(potential, ensemble), donate=donate)
+
+
 def vv_segment_engine(cfg_run: DPConfig, impl: Optional[str],
                       nsel_norm: Optional[int],
                       donate: Optional[bool] = None) -> SegmentEngine:
-    """Engine whose step is one full kick-drift-(force)-kick Verlet step.
-
-    Cached per (cfg_run, impl, nsel_norm) so repeated ``run_md`` calls —
-    and capacity-escalation retries — reuse compiled segments. Everything
-    array-valued (params, nlist, box, masses, dt) is a traced aux arg.
-    """
-    return SegmentEngine(make_vv_step(cfg_run, impl, nsel_norm),
-                         donate=donate)
+    """Legacy DP + NVE engine (shim over :func:`md_segment_engine`)."""
+    return md_segment_engine(api.DPPotential(cfg_run, impl, nsel_norm),
+                             api.NVE(), donate)
 
 
 # ------------------------------------------- two-level scan (outer engine)
@@ -213,12 +244,14 @@ class OuterCarry(NamedTuple):
 
     ``overflow`` accumulates the worst neighbor-capacity excess seen by any
     on-device rebuild in the chunk; it is the ONLY value the host inspects —
-    once per chunk of segments, not per segment.
+    once per chunk of segments, not per segment. ``ens`` threads the
+    ensemble's extra state through the two-level scan.
     """
     pos: jax.Array       # (N, 3) A
     vel: jax.Array       # (N, 3) A/fs
     force: jax.Array     # (N, 3) eV/A
     overflow: jax.Array  # () int32
+    ens: Any = ()        # ensemble state pytree
 
 
 class OuterEngine:
@@ -254,8 +287,7 @@ class OuterEngine:
 
 
 @functools.lru_cache(maxsize=None)
-def vv_outer_engine(cfg_run: DPConfig, impl: Optional[str],
-                    nsel_norm: Optional[int],
+def md_outer_engine(potential: api.Potential, ensemble: api.Ensemble,
                     spec: neighbors.NeighborSpec,
                     box_key: Tuple[float, ...],
                     donate: Optional[bool] = None) -> OuterEngine:
@@ -264,26 +296,38 @@ def vv_outer_engine(cfg_run: DPConfig, impl: Optional[str],
     Each scanned segment rebuilds the neighbor list ON DEVICE at the
     segment-start positions (static-shape sort-based binning — the same
     cell-list code the host path jits, embedded in the trace) and then runs
-    ``seg_len`` Verlet steps against it. Capacity overflow cannot branch
+    ``seg_len`` MD steps against it. Capacity overflow cannot branch
     inside the trace; it accumulates in the carry and the driver checks it
     once per chunk, retrying the whole chunk from a snapshot with
-    geometrically escalated capacities (``cfg_run.sel`` == ``spec.sel`` and
-    ``nsel_norm`` pins the physics, so escalation changes padding only).
+    geometrically escalated capacities (``potential.sel`` == ``spec.sel``
+    and the potential's pinned normalization keep the physics fixed, so
+    escalation changes padding only). The ensemble state threads through
+    both scan levels in the carry.
     """
     nbr_fn = neighbors.make_cell_list_fn(
         spec, np.asarray(box_key, float), jit=False)
-    vv_step = make_vv_step(cfg_run, impl, nsel_norm)
+    md_step = make_md_step(potential, ensemble)
 
     def outer_seg(carry: OuterCarry, seg_len: int,
                   params, typ, box, masses, dt):
         nlist, ovf = nbr_fn(carry.pos, typ)
-        inner = VVCarry(carry.pos, carry.vel, carry.force)
-        inner, th = scan_segment(vv_step, inner, seg_len,
+        inner = MDCarry(carry.pos, carry.vel, carry.force, carry.ens)
+        inner, th = scan_segment(md_step, inner, seg_len,
                                  params, nlist, typ, box, masses, dt)
         return OuterCarry(inner.pos, inner.vel, inner.force,
-                          jnp.maximum(carry.overflow, ovf)), th
+                          jnp.maximum(carry.overflow, ovf), inner.ens), th
 
     return OuterEngine(outer_seg, donate=donate)
+
+
+def vv_outer_engine(cfg_run: DPConfig, impl: Optional[str],
+                    nsel_norm: Optional[int],
+                    spec: neighbors.NeighborSpec,
+                    box_key: Tuple[float, ...],
+                    donate: Optional[bool] = None) -> OuterEngine:
+    """Legacy DP + NVE outer engine (shim over :func:`md_outer_engine`)."""
+    return md_outer_engine(api.DPPotential(cfg_run, impl, nsel_norm),
+                           api.NVE(), spec, box_key, donate)
 
 
 def chunk_schedule(steps: int, rebuild_every: int,

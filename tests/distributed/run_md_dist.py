@@ -10,7 +10,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 import numpy as np
 from repro.core import DPConfig, init_dp_params, dp_energy_forces
-from repro.md import lattice, neighbors, domain, integrator
+from repro.md import api, lattice, neighbors, domain, integrator
 from jax.sharding import PartitionSpec as P, NamedSharding
 
 def main():
@@ -45,7 +45,7 @@ def main():
             step_fn = domain.make_distributed_md_step(
                 cfg, dspec, mesh, (63.546,), dt_fs=1e-3, decomp=decomp,
                 neighbor=nbr)
-            ns, th = step_fn(params_r, state0)
+            (ns, _), th = step_fn(params_r, state0, ())
             assert int(th["halo_overflow"]) <= 0, (decomp, nbr)
             assert int(th["nbr_overflow"]) <= 0, (decomp, nbr)
             assert int(th["n_atoms"]) == len(pos)
@@ -95,10 +95,10 @@ def main():
     state_py = state0
     pes = []
     for _ in range(n_steps):
-        state_py, th = step_fn(params_r, state_py)
+        (state_py, _), th = step_fn(params_r, state_py, ())
         pes.append(float(th["pe"]))
     run_segment = domain.make_segment_runner(step_fn, donate=False)
-    state_scan, th_seg = run_segment(state0, params_r, n_steps)
+    (state_scan, _), th_seg = run_segment(state0, params_r, n_steps)
     domain.check_segment_thermo(th_seg)
     pe_seg = np.asarray(th_seg["pe"])
     assert pe_seg.shape == (n_steps,), pe_seg.shape
@@ -119,12 +119,12 @@ def main():
     for _ in range(n_segs):
         state_ref, movf = mig(state_ref)            # migrate at seg start
         assert int(movf) <= 0
-        state_ref, th_ref = run_segment(state_ref, params_r, seg_len)
+        (state_ref, _), th_ref = run_segment(state_ref, params_r, seg_len)
         domain.check_segment_thermo(th_ref)
     program = domain.make_outer_md_program(
         cfg, dspec, mesh, (63.546,), 0.5, decomp="atoms", neighbor="cells",
         donate=False)
-    state_out, th_out = program.run(state0, params_r, n_segs, seg_len)
+    state_out, _, th_out = program.run(state0, params_r, n_segs, seg_len)
     domain.check_segment_thermo(th_out)
     assert np.asarray(th_out["pe"]).shape == (n_segs, seg_len)
     assert np.asarray(th_out["mig_overflow"]).shape == (n_segs,)
@@ -142,6 +142,43 @@ def main():
     assert n_conserved == len(pos), n_conserved
     print(f"ok outer two-level scan == host segment loop over {n_segs} "
           f"segments x {seg_len} steps (dpos {dpos:.1e}, dvel {dvel:.1e})",
+          flush=True)
+
+    # composable API through the distributed two-level scan: zero-friction
+    # Langevin must be BIT-exact to NVE (the thermostat's O-step is a static
+    # no-op; only the RNG key rides extra in the carry).
+    lang0 = api.NVTLangevin(temp_k=330.0, friction=0.0, seed=7)
+    prog_l0 = domain.make_outer_md_program(
+        cfg, dspec, mesh, (63.546,), 0.5, decomp="atoms", neighbor="cells",
+        donate=False, ensemble=lang0)
+    ens0 = prog_l0.init_ensemble_state()
+    state_l0, ens1, th_l0 = prog_l0.run(state0, params_r, n_segs, seg_len,
+                                        ens0)
+    domain.check_segment_thermo(th_l0)
+    assert bool(jnp.all(state_l0.pos == state_out.pos))
+    assert bool(jnp.all(state_l0.vel == state_out.vel))
+    assert bool(jnp.all(ens1["key"] == ens0["key"]))   # untouched at gamma=0
+    print("ok zero-friction Langevin == NVE bit-exact through the "
+          "distributed outer scan", flush=True)
+
+    # LJ potential + finite-friction Langevin: the full non-DP seam runs
+    # distributed (halo + migration + rebuild + noise per slab) and cools a
+    # hot start (thermo sanity, not a trajectory reference).
+    lj = api.LJPotential(sel=(64,), rcut_lj=4.0)
+    prog_lj = domain.make_outer_md_program(
+        cfg, dspec, mesh, (63.546,), 0.5, decomp="atoms", neighbor="cells",
+        donate=False, potential=lj,
+        ensemble=api.NVTLangevin(temp_k=330.0, friction=0.05, seed=3))
+    ens_lj = prog_lj.init_ensemble_state()
+    state_lj, ens_lj, th_lj = prog_lj.run(state0, {}, n_segs, seg_len,
+                                          ens_lj)
+    domain.check_segment_thermo(th_lj)
+    assert int(jnp.sum(state_lj.mask)) == len(pos)
+    assert np.all(np.isfinite(np.asarray(th_lj["pe"])))
+    assert not bool(jnp.all(ens_lj["key"] == prog_lj.init_ensemble_state()["key"]))
+    print("ok LJ + Langevin runs distributed through the outer scan "
+          f"(pe[0] {float(np.asarray(th_lj['pe'])[0, 0]):+.2f} -> "
+          f"pe[-1] {float(np.asarray(th_lj['pe'])[-1, -1]):+.2f})",
           flush=True)
     print("ALL DISTRIBUTED MD CHECKS PASSED")
 

@@ -1,0 +1,290 @@
+"""Composable simulation API: the Potential x Ensemble seam guards.
+
+What must hold for the seam to be safe to build on:
+  * ``run_md`` (the deprecated kwarg shim) is BIT-exact with
+    ``Simulation.run`` for NVE + DP on all three engines — the migration
+    path for every existing caller;
+  * zero-friction Langevin is BIT-exact NVE (its O-step is a static no-op)
+    through every engine, including the outer two-level scan;
+  * both thermostats actually thermostat (a 2x-overheated box relaxes
+    toward the target, and toward a target equipartition alone would not
+    reach);
+  * ``LJPotential`` forces are the exact gradient of its energy.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dp_model
+from repro.md import api, driver, lattice, neighbors
+
+
+def _sim_kw(**over):
+    kw = dict(steps=40, dt_fs=1.0, temp_k=100.0, skin=0.5,
+              rebuild_every=10, thermo_every=20)
+    kw.update(over)
+    return kw
+
+
+# ------------------------------------------------- run_md shim <-> Simulation
+
+@pytest.mark.parametrize("engine", ["python", "scan", "outer"])
+def test_run_md_shim_matches_simulation_bitexact(tiny_cfg, tiny_params,
+                                                 engine):
+    """The deprecation shim must build EXACTLY the spec Simulation runs:
+    bit-identical trajectories and thermo for NVE + DP on every engine."""
+    pos, typ, box = lattice.fcc_copper(3, 3, 3)
+    kw = _sim_kw(engine=engine)
+    r1 = driver.run_md(tiny_cfg, tiny_params, pos, typ, box, **kw)
+    spec = api.SimulationSpec(
+        potential=api.DPPotential(tiny_cfg, nsel_norm=tiny_cfg.nsel),
+        ensemble=api.NVE(), **kw)
+    r2 = api.Simulation(spec).run(tiny_params, pos, typ, box)
+    np.testing.assert_array_equal(r1.final_pos, r2.final_pos)
+    np.testing.assert_array_equal(r1.final_vel, r2.final_vel)
+    assert r1.thermo == r2.thermo
+    assert (r1.engine, r1.host_syncs, r1.escalations) == \
+        (r2.engine, r2.host_syncs, r2.escalations)
+
+
+# --------------------------------------------- zero-friction Langevin == NVE
+
+@pytest.mark.parametrize("engine", ["python", "scan", "outer"])
+def test_zero_friction_langevin_bitexact_nve(tiny_cfg, tiny_params, engine):
+    """friction=0 makes the Langevin O-step a STATIC no-op: the scanned
+    program must be op-identical to NVE (only a dead RNG key rides in the
+    carry), so trajectories agree bit-for-bit — including through the outer
+    two-level scan where the ensemble state crosses both scan levels."""
+    pos, typ, box = lattice.fcc_copper(3, 3, 3)
+    kw = _sim_kw(engine=engine)
+    r_nve = driver.run_md(tiny_cfg, tiny_params, pos, typ, box, **kw)
+    r_l0 = driver.run_md(tiny_cfg, tiny_params, pos, typ, box,
+                         ensemble=api.NVTLangevin(temp_k=100.0,
+                                                  friction=0.0), **kw)
+    np.testing.assert_array_equal(r_l0.final_pos, r_nve.final_pos)
+    np.testing.assert_array_equal(r_l0.final_vel, r_nve.final_vel)
+    assert r_l0.thermo == r_nve.thermo
+
+
+def test_finite_friction_langevin_differs_from_nve(tiny_cfg, tiny_params):
+    """Sanity for the test above: the noise path is actually live."""
+    pos, typ, box = lattice.fcc_copper(2, 2, 2)
+    kw = _sim_kw(engine="scan", steps=10)
+    r_nve = driver.run_md(tiny_cfg, tiny_params, pos, typ, box, **kw)
+    r_lg = driver.run_md(tiny_cfg, tiny_params, pos, typ, box,
+                         ensemble=api.NVTLangevin(temp_k=100.0,
+                                                  friction=0.1), **kw)
+    assert np.max(np.abs(r_lg.final_vel - r_nve.final_vel)) > 1e-6
+
+
+# ------------------------------------------------------- thermostat physics
+
+def _lj_cu(nx=3):
+    pos, typ, box = lattice.fcc_copper(nx, nx, nx)
+    lj = api.LJPotential(sel=(64,), rcut_lj=4.0)
+    return lj, pos, typ, box
+
+
+@pytest.mark.parametrize("ensemble", [
+    api.NVTLangevin(temp_k=330.0, friction=0.05, seed=2),
+    api.BerendsenThermostat(temp_k=330.0, tau_fs=25.0),
+], ids=["langevin", "berendsen"])
+def test_thermostats_relax_overheated_box(ensemble):
+    """A 2x-overheated LJ copper box must relax toward 330 K."""
+    lj, pos, typ, box = _lj_cu()
+    spec = api.SimulationSpec(potential=lj, ensemble=ensemble, steps=400,
+                              dt_fs=1.0, temp_k=660.0, skin=1.0,
+                              rebuild_every=20, thermo_every=50,
+                              engine="scan")
+    res = api.Simulation(spec).run({}, pos, typ, box)
+    t_tail = np.mean([row["temp"] for row in res.thermo[-3:]])
+    # 108 atoms: canonical temperature fluctuation sigma ~ 330*sqrt(2/3N)
+    # ~ 26 K; allow 3 sigma on top of residual relaxation error
+    assert abs(t_tail - 330.0) < 90.0, (t_tail, res.thermo)
+
+
+def test_langevin_reaches_target_above_equipartition():
+    """Equipartition alone drops a 660 K kinetic start toward ~330 K in a
+    harmonic crystal — so relaxing 660 -> 330 could pass thermostat-free.
+    Pulling the SAME start UP to a 500 K target cannot: only the noise
+    term injects that energy."""
+    lj, pos, typ, box = _lj_cu()
+    spec = api.SimulationSpec(
+        potential=lj,
+        ensemble=api.NVTLangevin(temp_k=500.0, friction=0.1, seed=4),
+        steps=400, dt_fs=1.0, temp_k=660.0, skin=1.0, rebuild_every=20,
+        thermo_every=50, engine="outer")
+    res = api.Simulation(spec).run({}, pos, typ, box)
+    t_tail = np.mean([row["temp"] for row in res.thermo[-3:]])
+    assert abs(t_tail - 500.0) < 110.0, (t_tail, res.thermo)
+
+
+# --------------------------------------------------------------- LJ physics
+
+def test_lj_forces_match_grad_of_energy():
+    """The scatter-add force assembly must equal -dE/dpos exactly."""
+    pos, typ, box = lattice.fcc_copper(2, 2, 2)
+    rng = np.random.default_rng(0)
+    pos = np.mod(pos + rng.normal(0, 0.08, pos.shape), box)
+    posj = jnp.asarray(pos, jnp.float32)
+    typj = jnp.asarray(typ, jnp.int32)
+    boxj = jnp.asarray(box, jnp.float32)
+    lj = api.LJPotential(sel=(64,), rcut_lj=4.0)
+    spec = neighbors.NeighborSpec(rcut_nbr=4.5, sel=(64,))
+    nlist, ovf = neighbors.brute_force_neighbors(posj, typj, spec, boxj)
+    assert int(ovf) <= 0
+    e, f, stats = lj.energy_forces({}, posj, typj, nlist, box=boxj)
+
+    def e_of_pos(p):
+        rij, nmask = dp_model.gather_rij(p, nlist, boxj)
+        return jnp.sum(lj.atomic_energy({}, rij, nmask, typj))
+
+    np.testing.assert_allclose(float(e), float(e_of_pos(posj)), rtol=1e-6)
+    f_ref = -jax.grad(e_of_pos)(posj)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(f_ref), atol=2e-5)
+    assert stats["virial"].shape == (3, 3)
+
+
+def test_lj_pairs_beyond_rcut_contribute_zero():
+    """Skin-buffer pairs past rcut must be EXACT zeros (engine parity
+    depends on it: list identity may differ between engines)."""
+    lj = api.LJPotential(sel=(8,), rcut_lj=4.0)
+    rij = jnp.asarray([[[4.5, 0.0, 0.0], [3.0, 0.0, 0.0]]], jnp.float32)
+    nmask = jnp.asarray([[True, True]])
+    e_i = lj.atomic_energy({}, rij, nmask, jnp.zeros((1,), jnp.int32))
+    e_close_only = lj.atomic_energy(
+        {}, rij, jnp.asarray([[False, True]]), jnp.zeros((1,), jnp.int32))
+    assert float(e_i[0]) == float(e_close_only[0])
+    # and the shifted potential is ~0 at the cutoff (continuity)
+    rij_edge = jnp.asarray([[[3.999, 0.0, 0.0]]], jnp.float32)
+    e_edge = lj.atomic_energy({}, rij_edge, jnp.asarray([[True]]),
+                              jnp.zeros((1,), jnp.int32))
+    assert abs(float(e_edge[0])) < 1e-4
+
+
+def test_lj_engine_parity():
+    """All three engines agree on an LJ trajectory (fp-order tolerance for
+    python, bit-exact scan vs outer) — the seam is engine-agnostic."""
+    lj, pos, typ, box = _lj_cu(nx=2)
+    kw = _sim_kw()
+    rp = driver.run_md(None, {}, pos, typ, box, potential=lj,
+                       engine="python", **kw)
+    rs = driver.run_md(None, {}, pos, typ, box, potential=lj,
+                       engine="scan", **kw)
+    ro = driver.run_md(None, {}, pos, typ, box, potential=lj,
+                       engine="outer", **kw)
+    np.testing.assert_allclose(rs.final_pos, rp.final_pos, atol=1e-4)
+    np.testing.assert_array_equal(ro.final_pos, rs.final_pos)
+    np.testing.assert_array_equal(ro.final_vel, rs.final_vel)
+
+
+# ------------------------------------------------- adapters / registries
+
+def test_tabulated_potential_owns_params_and_matches_impl_kwarg(tiny_cfg,
+                                                                tiny_params):
+    """TabulatedDPPotential(params post-processing included) is bit-exact
+    with the legacy run_md(impl=...) + manual tabulate_model spelling."""
+    pos, typ, box = lattice.fcc_copper(2, 2, 2)
+    kw = _sim_kw(engine="scan", steps=20)
+    pot = api.TabulatedDPPotential(tiny_cfg, kind="quintic",
+                                   nsel_norm=tiny_cfg.nsel)
+    p_tab = pot.prepare_params(tiny_params)
+    assert pot.prepare_params(p_tab) is p_tab          # same-kind idempotent
+    # cross-kind tables must be REBUILT, never evaluated through the wrong
+    # code path (quintic tables carry "step", cheb "upper")
+    cheb_pot = api.TabulatedDPPotential(tiny_cfg, kind="cheb",
+                                        nsel_norm=tiny_cfg.nsel)
+    p_cheb = cheb_pot.prepare_params(p_tab)
+    assert p_cheb is not p_tab
+    assert all("upper" in t for t in p_cheb["table"]["nets"].values())
+    r_api = api.Simulation(api.SimulationSpec(potential=pot, **kw)).run(
+        p_tab, pos, typ, box)
+    r_old = driver.run_md(tiny_cfg, dp_model.tabulate_model(
+        tiny_params, tiny_cfg, "quintic"), pos, typ, box, impl="quintic",
+        **kw)
+    np.testing.assert_array_equal(r_api.final_pos, r_old.final_pos)
+
+
+def test_potential_with_layout_pins_normalization(tiny_cfg):
+    pot = api.DPPotential(tiny_cfg)
+    grown = pot.with_layout((96,))
+    assert grown.cfg.sel == (96,)
+    # escalated capacity must keep the NATIVE normalization
+    assert grown.nsel_norm == tiny_cfg.nsel
+    again = grown.with_layout((160,))
+    assert again.nsel_norm == tiny_cfg.nsel
+
+
+def test_registries_and_hashability(tiny_cfg):
+    assert isinstance(api.make_potential("dp", tiny_cfg), api.DPPotential)
+    assert isinstance(api.make_potential("cheb", tiny_cfg),
+                      api.TabulatedDPPotential)
+    # "dp" + a tabulated impl must resolve to the adapter whose init_params
+    # produce tables the evaluator can actually use
+    pot_q = api.make_potential("dp", tiny_cfg, impl="quintic")
+    assert isinstance(pot_q, api.TabulatedDPPotential)
+    assert pot_q.kind == "quintic" and pot_q.impl == "quintic"
+    assert "table" in pot_q.init_params(jax.random.PRNGKey(0))
+    assert isinstance(api.make_potential("lj"), api.LJPotential)
+    assert isinstance(api.make_ensemble("nvt_langevin", friction=0.2),
+                      api.NVTLangevin)
+    assert isinstance(api.make_ensemble("berendsen"),
+                      api.BerendsenThermostat)
+    with pytest.raises(ValueError):
+        api.make_potential("dp")            # needs a cfg
+    with pytest.raises(ValueError):
+        api.make_ensemble("npt")
+    # the engines cache compiled programs keyed on the adapters
+    assert hash(api.make_potential("lj")) == hash(api.LJPotential())
+    assert hash(api.NVTLangevin(330.0, 0.1)) == hash(
+        api.NVTLangevin(330.0, 0.1))
+    assert api.NVE() != api.NVTLangevin()
+
+
+def test_langevin_state_init_shapes():
+    lg = api.NVTLangevin(seed=3)
+    single = lg.init_state()
+    stacked = lg.init_state(4)
+    assert single["key"].shape == (2,)
+    assert stacked["key"].shape == (4, 2)
+    # distinct per-slab streams
+    assert len({tuple(np.asarray(k)) for k in stacked["key"]}) == 4
+    assert api.NVE().init_state(4) == ()
+
+
+# ------------------------------------------- engine diagnostics (satellite)
+
+def test_python_engine_surfaces_deferred_overflow_diagnostics(tiny_cfg,
+                                                              tiny_params):
+    """The python engine defers its overflow checks out of the hot loop;
+    the deferred flags and the real host-sync count must surface in
+    MDResult so the three engines report comparable diagnostics."""
+    pos, typ, box = lattice.fcc_copper(2, 2, 2)
+    res = driver.run_md(tiny_cfg, tiny_params, pos, typ, box,
+                        engine="python", **_sim_kw())
+    # 40 steps, rebuild every 10 -> init check + 4 deferred rebuild flags
+    assert res.overflow_checks == 5
+    assert res.overflow_worst <= 0          # negative = slot slack left
+    # init build + one fetch per thermo row + the deferred flag check
+    assert res.host_syncs == 1 + len(res.thermo) + 1
+    for engine in ("scan", "outer"):
+        r = driver.run_md(tiny_cfg, tiny_params, pos, typ, box,
+                          engine=engine, **_sim_kw())
+        assert r.overflow_checks >= 1
+        assert r.overflow_worst <= 0
+
+
+def test_escalation_reports_positive_worst_flag(tiny_cfg, tiny_params):
+    """When capacities DO overflow, the worst flag observed is positive
+    even though the run recovers via escalation."""
+    small = dataclasses.replace(tiny_cfg, sel=(4,))
+    pos, typ, box = lattice.fcc_copper(2, 2, 2)
+    res = driver.run_md(small, tiny_params, pos, typ, box, engine="scan",
+                        **_sim_kw(steps=10))
+    assert res.escalations > 0
+    assert res.overflow_worst > 0
+    assert res.overflow_checks > 1

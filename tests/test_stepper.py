@@ -104,6 +104,7 @@ def test_outer_chunk_retry_on_overflow_preserves_trajectory(tiny_cfg,
     import jax.numpy as jnp
 
     from repro.core import dp_model
+    from repro.md import api
     from repro.md import driver as drv
 
     pos, typ, box = lattice.fcc_copper(3, 3, 3)
@@ -113,8 +114,10 @@ def test_outer_chunk_retry_on_overflow_preserves_trajectory(tiny_cfg,
     masses = jnp.asarray(
         lattice.masses_for(tiny_cfg.type_map, np.asarray(typ)))
     vel = jax.numpy.zeros_like(posj)
+    pot = api.DPPotential(tiny_cfg, impl=None, nsel_norm=tiny_cfg.nsel)
+    ens = api.NVE()
     kw = dict(steps=40, dt_fs=1.0, rebuild_every=10, thermo_every=20,
-              chunk_segments=8, impl=None, escalation=None, escalations0=0)
+              chunk_segments=8, escalation=None, escalations0=0)
 
     # clean reference: ample capacities from the start, same nsel_norm
     spec_ok = neighbors.NeighborSpec(rcut_nbr=tiny_cfg.rcut + 0.5,
@@ -125,7 +128,7 @@ def test_outer_chunk_retry_on_overflow_preserves_trajectory(tiny_cfg,
     _, f0, _ = dp_model.dp_energy_forces(
         tiny_params, build_ok.cfg_run, posj, build_ok.nlist, typj, boxj,
         nsel_norm=tiny_cfg.nsel)
-    ref = drv._run_md_outer(tiny_cfg, tiny_params, posj, vel, f0, typj,
+    ref = drv._run_md_outer(pot, ens, tiny_params, posj, vel, f0, typj,
                             boxj, np.asarray(box, float), masses, build_ok,
                             **kw)
     assert ref.escalations == 0
@@ -139,7 +142,7 @@ def test_outer_chunk_retry_on_overflow_preserves_trajectory(tiny_cfg,
         nlist=build_ok.nlist,
         cfg_run=dc.replace(tiny_cfg, sel=(4,)),
         spec=spec_small, escalations=0)
-    res = drv._run_md_outer(tiny_cfg, tiny_params, posj, vel, f0, typj,
+    res = drv._run_md_outer(pot, ens, tiny_params, posj, vel, f0, typj,
                             boxj, np.asarray(box, float), masses,
                             build_small, **kw)
     assert res.escalations > 0
