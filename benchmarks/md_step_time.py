@@ -63,13 +63,13 @@ def bench_single_process(args, steps: int, reps: int):
             params = dp_model.tabulate_model(
                 params, cfg, "quintic" if args.impl == "quintic" else "cheb")
         potential = None                    # run_md wraps cfg/impl
-    ensemble = api.make_ensemble(args.ensemble) \
-        if args.ensemble != "nve" else None
+    ensemble, barostat = (None, None) if args.ensemble == "nve" \
+        else api.resolve_ensemble(args.ensemble)
     pos, typ, box = lattice.fcc_copper(args.nx, args.nx, args.nx)
     kw = dict(steps=steps, dt_fs=1.0, temp_k=330.0, skin=1.0,
               rebuild_every=args.rebuild_every, thermo_every=50,
               impl=args.impl, chunk_segments=args.chunk_segments,
-              potential=potential, ensemble=ensemble)
+              potential=potential, ensemble=ensemble, barostat=barostat)
 
     print(f"{len(pos)} Cu atoms, {steps} steps, rebuild every "
           f"{args.rebuild_every}, impl={args.impl}, "
@@ -146,9 +146,12 @@ def bench_distributed_worker(args, steps: int, reps: int) -> int:
 
     def one_run():
         state = state0
+        box_d = None
         t0 = time.time()
         for n_segs, seg_len in sched:
-            state, _, thermo = program.run(state, params_r, n_segs, seg_len)
+            state, _, box_d, _, thermo = program.run(state, params_r,
+                                                     n_segs, seg_len,
+                                                     box=box_d)
             domain.check_segment_thermo(thermo)
         jax.block_until_ready(state)
         return (time.time() - t0) * 1e6 / (steps * n)
@@ -354,8 +357,12 @@ def run():
     """``benchmarks.run`` entry: tiny shape, one rep, headline CSV rows.
 
     Writes/extends ``BENCH_md.json`` exactly like the CLI (the trajectory
-    list accumulates across PRs, keyed by git sha).
+    list accumulates across PRs, keyed by git sha + protocol shape). A
+    second NPT invocation appends an ``npt_berendsen`` trajectory row so
+    the artifact tracks the carried-box overhead vs the NVE path.
     """
+    rc_npt = main(["--tiny", "--reps", "1", "--steps", "40",
+                   "--ensemble", "npt_berendsen"])
     rc = main(["--tiny", "--reps", "1", "--steps", "40"])
     with open("BENCH_md.json") as f:
         payload = json.load(f)
@@ -366,6 +373,20 @@ def run():
             for name, key in (("python", "python_loop"),
                               ("scan", "scan_segment"),
                               ("outer", "outer_scan"))]
+    npt_rows = [e for e in payload.get("trajectory", [])
+                if e.get("ensemble") == "npt_berendsen"]
+    # a failed NPT invocation must not surface a PRIOR commit's trajectory
+    # entry as this run's timing — report the failure, not stale numbers
+    if npt_rows and rc_npt == 0:
+        npt = npt_rows[-1]
+        for eng in ("scan", "outer"):
+            rows.append({"engine": f"{eng}_npt",
+                         "us_per_step_atom_min":
+                             npt["us_per_step_atom_min"][eng],
+                         "host_syncs": -1, "failed": False})
+    elif rc_npt != 0:
+        rows.append({"engine": "scan_npt", "us_per_step_atom_min": -1.0,
+                     "host_syncs": -1, "failed": True})
     return rows
 
 

@@ -38,12 +38,19 @@ def main():
                     help="dp runs the full implementation ladder; lj is the "
                          "analytic Lennard-Jones (no DP params)")
     ap.add_argument("--ensemble", default="nve",
-                    choices=api.ENSEMBLE_CHOICES)
+                    choices=api.ENSEMBLE_CHOICES,
+                    help="npt_* names add a barostat: the box evolves in "
+                         "the scan carry toward --pressure")
     ap.add_argument("--temp", type=float, default=330.0)
     ap.add_argument("--friction", type=float, default=0.1,
                     help="nvt_langevin friction (1/fs)")
     ap.add_argument("--tau", type=float, default=100.0,
                     help="berendsen time constant (fs)")
+    ap.add_argument("--pressure", type=float, default=None,
+                    help="target pressure (GPa); with a non-NPT ensemble "
+                         "this attaches a Berendsen barostat")
+    ap.add_argument("--ptau", type=float, default=500.0,
+                    help="barostat time constant (fs)")
     args = ap.parse_args()
 
     # paper-shaped copper model, scaled for CPU (sel 128 vs the paper's 512)
@@ -53,8 +60,12 @@ def main():
     pos, typ, box = lattice.fcc_copper(args.nx, args.nx, args.nx)
     print(f"{len(pos)} copper atoms, box {np.round(box, 2)}, "
           f"ensemble {args.ensemble}")
-    ensemble = api.make_ensemble(args.ensemble, temp_k=args.temp,
-                                 friction=args.friction, tau_fs=args.tau)
+    # resolve_ensemble owns the coupling policy: npt_* names expand to a
+    # thermostat + barostat pair, and an explicit --pressure attaches a
+    # Berendsen barostat to any ensemble (same as SimulationSpec)
+    ensemble, barostat = api.resolve_ensemble(
+        args.ensemble, temp_k=args.temp, friction=args.friction,
+        tau_fs=args.tau, pressure_gpa=args.pressure, ptau_fs=args.ptau)
 
     if args.potential == "lj":
         ladder = [("lj", api.LJPotential(sel=cfg.sel, rcut_lj=cfg.rcut), {})]
@@ -69,15 +80,20 @@ def main():
     for name, pot, params in ladder:
         sim = api.Simulation(api.SimulationSpec(
             potential=pot, ensemble=ensemble, steps=args.steps, dt_fs=1.0,
-            temp_k=args.temp, engine=args.engine))
+            temp_k=args.temp, engine=args.engine, barostat=barostat))
         res = sim.run(params, pos, typ, box)
         drift = abs(res.thermo[-1]["etot"] - res.thermo[0]["etot"])
         if base is None:
             base = res.us_per_step_atom
+        extra = ""
+        if barostat is not None:
+            extra = (f"  P_final {res.thermo[-1]['press_gpa']:+.2f} GPa "
+                     f"box_x {res.final_box[0]:.3f} A")
         print(f"impl={name:8s} engine={res.engine:6s} "
               f"{res.us_per_step_atom:8.2f} us/step/atom "
               f"(speedup {base / res.us_per_step_atom:4.1f}x)  "
-              f"drift {drift:.2e} eV  T_final {res.thermo[-1]['temp']:.0f} K")
+              f"drift {drift:.2e} eV  T_final {res.thermo[-1]['temp']:.0f} K"
+              + extra)
 
 
 if __name__ == "__main__":

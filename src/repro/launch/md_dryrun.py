@@ -106,7 +106,8 @@ def dp_model_flops(cfg: DPConfig, n_atoms: int, impl: str) -> float:
 def lower_md_cell(cell: MDCell, impl: str, mesh, multi_pod: bool,
                   verbose: bool = True, segment_len: int = 4,
                   outer_segments: int = 0, potential_name: str = "dp",
-                  ensemble: Optional[Any] = None) -> Dict[str, Any]:
+                  ensemble: Optional[Any] = None,
+                  barostat: Optional[Any] = None) -> Dict[str, Any]:
     spatial_axis = ("pod", "data") if multi_pod else "data"
     n_slabs = mesh.shape["data"] * (mesh.shape.get("pod", 1))
     n_model = mesh.shape["model"]
@@ -117,6 +118,8 @@ def lower_md_cell(cell: MDCell, impl: str, mesh, multi_pod: bool,
         name = f"{potential_name}_{cell.name}/{mesh_name}"
     if type(ensemble) is not api.NVE:
         name += f"/{type(ensemble).__name__}"
+    if barostat is not None:
+        name += f"/{type(barostat).__name__}"
     if outer_segments:
         name += f"/outer{outer_segments}"
     try:
@@ -139,28 +142,29 @@ def lower_md_cell(cell: MDCell, impl: str, mesh, multi_pod: bool,
 
         params_shapes = jax.eval_shape(make_params, key)
         ens_shapes = jax.eval_shape(lambda: ensemble.init_state(n_slabs))
+        baro_shapes = jax.eval_shape(
+            lambda: barostat.init_state()) if barostat is not None else ()
+        box_shape = jax.ShapeDtypeStruct((3,), jnp.float32)
         if outer_segments:
             # whole-trajectory program: migration + rebuild inside the scan
             program = domain.make_outer_md_program(
                 cfg, spec, mesh, cell.masses, cell.dt_fs, impl=impl,
                 spatial_axis=spatial_axis, decomp="atoms", neighbor="cells",
-                potential=potential, ensemble=ensemble)
-            outer_fn = program.build(outer_segments, segment_len)
-
-            def seg_fn(params, state, ens):
-                return outer_fn(params, state, ens)
+                potential=potential, ensemble=ensemble, barostat=barostat)
+            seg_fn = program.build(outer_segments, segment_len)
         else:
             step_fn = domain.make_distributed_md_step(
                 cfg, spec, mesh, cell.masses, cell.dt_fs, impl=impl,
                 spatial_axis=spatial_axis, decomp="atoms", neighbor="cells",
-                potential=potential, ensemble=ensemble)
+                potential=potential, ensemble=ensemble, barostat=barostat)
 
-            def seg_fn(params, state, ens):
+            def seg_fn(params, state, ens, box, baro):
                 # the production inner loop: one scan per rebuild segment
-                (state, ens), th = stepper.scan_segment(
-                    lambda c, p: step_fn(p, c[0], c[1]), (state, ens),
+                # (the dynamic box + barostat state ride in the carry)
+                (state, ens, box, baro), th = stepper.scan_segment(
+                    lambda c, p: step_fn(p, *c), (state, ens, box, baro),
                     segment_len, params)
-                return state, ens, th
+                return state, ens, box, baro, th
 
         sl = spec.atom_capacity
         state_shapes = domain.SlabState(
@@ -172,16 +176,22 @@ def lower_md_cell(cell: MDCell, impl: str, mesh, multi_pod: bool,
         state_sh = domain.SlabState(*(NamedSharding(mesh, sp),) * 4)
         rep_tree = jax.tree.map(lambda _: NamedSharding(mesh, P()), params_shapes)
         ens_sh = jax.tree.map(lambda _: NamedSharding(mesh, sp), ens_shapes)
+        rep = NamedSharding(mesh, P())
+        baro_sh = jax.tree.map(lambda _: rep, baro_shapes)
         thermo_keys = list(domain.THERMO_KEYS)
         if outer_segments:
             thermo_keys.append("mig_overflow")
         thermo_sh = {k: NamedSharding(mesh, P()) for k in thermo_keys}
 
         t0 = time.time()
-        jitted = jax.jit(seg_fn, in_shardings=(rep_tree, state_sh, ens_sh),
-                         out_shardings=(state_sh, ens_sh, thermo_sh),
+        jitted = jax.jit(seg_fn,
+                         in_shardings=(rep_tree, state_sh, ens_sh, rep,
+                                       baro_sh),
+                         out_shardings=(state_sh, ens_sh, rep, baro_sh,
+                                        thermo_sh),
                          donate_argnums=(1,))
-        lowered = jitted.lower(params_shapes, state_shapes, ens_shapes)
+        lowered = jitted.lower(params_shapes, state_shapes, ens_shapes,
+                               box_shape, baro_shapes)
         compiled = lowered.compile()
         t_compile = time.time() - t0
 
@@ -274,10 +284,11 @@ def main(argv=None) -> int:
                     choices=api.ENSEMBLE_CHOICES,
                     help="integrator/thermostat plugged into the lowered "
                          "program (Langevin adds per-step RNG ops + a key "
-                         "in the scan carry)")
+                         "in the scan carry; npt_* adds a barostat and the "
+                         "dynamic box)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
-    ensemble = api.make_ensemble(args.ensemble)
+    ensemble, barostat = api.resolve_ensemble(args.ensemble)
 
     cells = {"cu": CU, "cu_strong": CU_STRONG, "h2o": H2O}
     systems = args.system or ["cu", "cu_strong", "h2o"]
@@ -299,7 +310,7 @@ def main(argv=None) -> int:
                                     segment_len=args.segment_len,
                                     outer_segments=args.outer_segments,
                                     potential_name=args.potential,
-                                    ensemble=ensemble)
+                                    ensemble=ensemble, barostat=barostat)
                 rows.append(row)
                 fails += row["status"] == "failed"
     if args.out:

@@ -54,11 +54,19 @@ def main(argv=None):
                     choices=api.POTENTIAL_CHOICES,
                     help="force model (lj needs no DP params at all)")
     ap.add_argument("--ensemble", default="nve",
-                    choices=api.ENSEMBLE_CHOICES)
+                    choices=api.ENSEMBLE_CHOICES,
+                    help="npt_* names pair a thermostat with a barostat: "
+                         "the box rides in the scan carry")
     ap.add_argument("--friction", type=float, default=0.1,
                     help="nvt_langevin friction (1/fs)")
     ap.add_argument("--tau", type=float, default=100.0,
                     help="berendsen time constant (fs)")
+    ap.add_argument("--pressure", type=float, default=None,
+                    help="target pressure (GPa); with a non-NPT ensemble "
+                         "this attaches a Berendsen barostat (matching the "
+                         "SimulationSpec.pressure_gpa behavior)")
+    ap.add_argument("--ptau", type=float, default=500.0,
+                    help="barostat time constant (fs)")
     args = ap.parse_args(argv)
 
     n_dev = len(jax.devices())
@@ -67,8 +75,12 @@ def main(argv=None):
     cfg = DPConfig(ntypes=1, rcut=4.0, rcut_smth=2.0, sel=(96,),
                    type_map=("Cu",), embed_widths=(8, 16, 32), axis_neuron=4,
                    fit_widths=(32, 32, 32))
-    ensemble = api.make_ensemble(args.ensemble, temp_k=args.temp,
-                                 friction=args.friction, tau_fs=args.tau)
+    # resolve_ensemble owns the coupling policy: npt_* names expand to a
+    # thermostat + barostat pair, and an explicit --pressure attaches a
+    # Berendsen barostat to any ensemble (same as SimulationSpec)
+    ensemble, barostat = api.resolve_ensemble(
+        args.ensemble, temp_k=args.temp, friction=args.friction,
+        tau_fs=args.tau, pressure_gpa=args.pressure, ptau_fs=args.ptau)
     if args.potential == "lj":
         potential = api.LJPotential(sel=cfg.sel, rcut_lj=cfg.rcut)
         params = {}
@@ -87,7 +99,8 @@ def main(argv=None):
         sim = api.SimulationSpec(
             potential=potential, ensemble=ensemble, steps=args.steps,
             dt_fs=args.dt, temp_k=args.temp, skin=0.5,
-            rebuild_every=args.rebuild_every, thermo_every=33)
+            rebuild_every=args.rebuild_every, thermo_every=33,
+            barostat=barostat)
         res = driver.run_simulation(sim, params, pos, typ, box)
         for row in res.thermo:
             print(f"step {row['step']:4d}  E_pot {row['pe']:+.4f}  "
@@ -120,60 +133,73 @@ def main(argv=None):
 
     print(f"{n} atoms, {n_slabs} slabs x {args.model_axis} model shards "
           f"on {n_dev} devices, engine={args.engine}, "
-          f"potential={args.potential}, ensemble={args.ensemble}")
+          f"potential={args.potential}, ensemble={args.ensemble}"
+          + (f", P0={args.pressure or 0.0} GPa"
+             if barostat is not None else ""))
 
-    def show(pe, ke, natoms, base, count):
+    def show(thermo, base, count):
+        pe = np.asarray(thermo["pe"]).reshape(-1)
+        ke = np.asarray(thermo["ke"]).reshape(-1)
+        natoms = np.asarray(thermo["n_atoms"]).reshape(-1)
+        press = np.asarray(thermo["press"]).reshape(-1)
+        vol = np.asarray(thermo["vol"]).reshape(-1)
         for i in range(count):
             gstep = base + i + 1
             if gstep % 33 == 0 or gstep == 1:
                 print(f"step {gstep:4d}  E_pot {pe[i]:+.4f}  "
-                      f"E_tot {pe[i]+ke[i]:+.4f}  atoms {int(natoms[i])}",
+                      f"E_tot {pe[i]+ke[i]:+.4f}  "
+                      f"P {press[i] * integrator.EV_A3_TO_GPA:+.2f} GPa  "
+                      f"V {vol[i]:.0f} A^3  atoms {int(natoms[i])}",
                       flush=True)
 
+    boxd = None     # dynamic box: carried across dispatches (None: launch)
     if args.engine == "outer":
         program = domain.make_outer_md_program(
             cfg, spec, mesh, (63.546,), args.dt, impl=args.impl,
             decomp="atoms", neighbor="cells", potential=potential,
-            ensemble=ensemble)
+            ensemble=ensemble, barostat=barostat)
         ens = program.init_ensemble_state()
+        baro = program.init_barostat_state()
         t0 = time.time()
         base = 0
         for n_segs, seg_len in stepper.chunk_schedule(
                 args.steps, args.rebuild_every, args.chunk_segments):
             # ONE dispatch per chunk of segments; migration + rebuild run
             # inside the scanned program. One host fetch checks the chunk's
-            # stacked overflow flags and prints its thermo.
-            state, ens, thermo = program.run(state, params_r, n_segs,
-                                             seg_len, ens)
+            # stacked overflow flags and prints its thermo; the dynamic box
+            # and barostat state come back in the same carry.
+            state, ens, boxd, baro, thermo = program.run(
+                state, params_r, n_segs, seg_len, ens, boxd, baro)
             domain.check_segment_thermo(thermo)
-            show(np.asarray(thermo["pe"]).reshape(-1),
-                 np.asarray(thermo["ke"]).reshape(-1),
-                 np.asarray(thermo["n_atoms"]).reshape(-1), base,
-                 n_segs * seg_len)
+            show(thermo, base, n_segs * seg_len)
             base += n_segs * seg_len
     else:
         step = domain.make_distributed_md_step(
             cfg, spec, mesh, (63.546,), args.dt, impl=args.impl,
             decomp="atoms", neighbor="cells", potential=potential,
-            ensemble=ensemble)
+            ensemble=ensemble, barostat=barostat)
         run_segment = domain.make_segment_runner(step)
         migrate = domain.make_migration_step(spec, mesh)
         ens = domain.init_ensemble_state(ensemble, n_slabs, mesh)
+        baro = barostat.init_state() if barostat is not None else ()
+        boxd = stepper.pack_box(box)
         t0 = time.time()
         base = 0
         for seg_len in stepper.segment_schedule(args.steps,
                                                 args.rebuild_every):
             # one scan dispatch per segment; thermo/overflow fetched after
-            (state, ens), thermo = run_segment(state, params_r, seg_len, ens)
+            (state, ens, boxd, baro), thermo = run_segment(
+                state, params_r, seg_len, ens, boxd, baro)
             domain.check_segment_thermo(thermo)
-            show(np.asarray(thermo["pe"]), np.asarray(thermo["ke"]),
-                 np.asarray(thermo["n_atoms"]), base, seg_len)
+            show(thermo, base, seg_len)
             base += seg_len
             if seg_len == args.rebuild_every:  # full segment: migration
-                state, movf = migrate(state)
+                state, movf = migrate(state, boxd)
                 assert int(movf) <= 0, "migration overflow"
     jax.block_until_ready(state)
     dt_wall = time.time() - t0
+    if boxd is not None and barostat is not None:
+        print(f"final box {np.round(np.asarray(boxd), 3)} A")
     print(f"{dt_wall/args.steps*1e6/n:.2f} us/step/atom wall (this host)")
 
 

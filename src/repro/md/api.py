@@ -29,6 +29,14 @@ and model families. This module is that seam for our three stepping engines
              ops), :class:`BerendsenThermostat` (per-step velocity
              rescaling toward ``temp_k``).
 
+  Barostat   ``apply(box, pos, vel, stress, state, dt)`` once per step
+             after the thermostat; the DYNAMIC BOX and the barostat state
+             ride in the scan carry. Implementations:
+             :class:`BerendsenBarostat` (weak-coupling box rescale) and
+             :class:`StochasticCellRescaleBarostat` (isotropic SCR with
+             the correct NPT volume fluctuations). Zero compressibility is
+             a STATIC no-op — bit-exact fixed-box NVE/NVT.
+
   Simulation ``SimulationSpec`` (what to run) + :class:`Simulation` (run
              it) replace the legacy ``driver.run_md`` kwarg pile;
              ``run_md`` remains as a thin deprecated shim that builds a
@@ -352,20 +360,131 @@ class BerendsenThermostat(NVE):
         return vel, state
 
 
+# =============================================================== Barostat
+
+@runtime_checkable
+class Barostat(Protocol):
+    """Pressure coupling the MD engines are generic over.
+
+    Once per step, AFTER the thermostat finalize, the engines call
+    ``apply(box, pos, vel, stress, state, dt)`` with the instantaneous
+    stress tensor sigma = (K + W) / V (eV/A^3) and get back the rescaled
+    ``(box, pos, vel, state)``. The box and the barostat's extra state (RNG
+    key, ...) ride IN the scan carry, which is what lets the box evolve
+    inside the fused on-device programs. ``init_state()`` mirrors
+    Ensemble.init_state — EXCEPT that distributed drivers replicate ONE
+    state across slabs (the box is global: every slab must draw the same
+    noise and compute the same rescale).
+
+    A zero-coupling barostat must be a STATIC no-op: the apply returns its
+    inputs unchanged without emitting ops, so the scanned program is
+    op-identical to the fixed-box path (bit-exact NVE/NVT, guarded by
+    tests).
+    """
+
+    def init_state(self) -> Any: ...
+
+    def apply(self, box, pos, vel, stress, state,
+              dt) -> Tuple[jax.Array, jax.Array, jax.Array, Any]: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class BerendsenBarostat:
+    """Weak-coupling box rescale toward ``pressure_gpa`` (Berendsen 1984).
+
+    Per step: ``mu^3 = 1 + compressibility * dt / tau * (P - P0)`` with P
+    the instantaneous pressure (GPa); box and positions scale affinely by
+    ``mu``, velocities are untouched. ``compressibility_per_gpa == 0`` is a
+    STATIC Python branch — the program is op-identical to the fixed-box
+    path (bit-exact, the NPT analogue of zero-friction Langevin). The
+    rescale is memoryless, so the barostat state is empty.
+    """
+
+    pressure_gpa: float = 0.0
+    tau_fs: float = 500.0
+    compressibility_per_gpa: float = 0.01   # ~ metals (bulk modulus 100 GPa)
+    max_scale: float = 1.02                 # per-step |mu| clamp (stability)
+
+    def init_state(self):
+        return ()
+
+    def apply(self, box, pos, vel, stress, state, dt):
+        if self.compressibility_per_gpa == 0.0:   # static: bit-exact no-op
+            return box, pos, vel, state
+        p_gpa = integrator.pressure_of(stress) * integrator.EV_A3_TO_GPA
+        mu3 = 1.0 + self.compressibility_per_gpa * dt / self.tau_fs * \
+            (p_gpa - self.pressure_gpa)
+        mu = jnp.clip(jnp.cbrt(jnp.maximum(mu3, 1e-6)),
+                      1.0 / self.max_scale, self.max_scale)
+        return box * mu, pos * mu, vel, state
+
+
+@dataclasses.dataclass(frozen=True)
+class StochasticCellRescaleBarostat:
+    """Isotropic stochastic cell rescale (Bernetti & Bussi 2020, the
+    MTK/Parrinello-style correct-ensemble alternative to Berendsen).
+
+    The log-volume performs the SDE ``d ln V = (beta_T / tau)(P - P0) dt +
+    sqrt(2 kB T beta_T / (V tau)) dW``: the drift is Berendsen's relaxation,
+    the noise restores the NPT volume fluctuations. Box/positions scale by
+    ``mu = exp(d ln V / 3)``, velocities by ``1/mu`` (the SCR momentum
+    rescale). The RNG key rides in the barostat state — replicated across
+    slabs in the distributed drivers so every slab draws the SAME noise and
+    the global box stays consistent. ``compressibility_per_gpa == 0`` is a
+    STATIC no-op (only a dead key rides in the carry): bit-exact fixed-box.
+    """
+
+    pressure_gpa: float = 0.0
+    tau_fs: float = 500.0
+    compressibility_per_gpa: float = 0.01
+    temp_k: float = 330.0
+    seed: int = 0
+    max_scale: float = 1.02
+
+    def init_state(self):
+        return {"key": jax.random.PRNGKey(self.seed)}
+
+    def apply(self, box, pos, vel, stress, state, dt):
+        if self.compressibility_per_gpa == 0.0:   # static: bit-exact no-op
+            return box, pos, vel, state
+        key, sub = jax.random.split(state["key"])
+        # compressibility per unit pressure: beta dP is dimensionless, so
+        # per-(eV/A^3) = per-GPa * (GPa per eV/A^3)
+        beta = self.compressibility_per_gpa * integrator.EV_A3_TO_GPA
+        p0 = self.pressure_gpa / integrator.EV_A3_TO_GPA
+        p = integrator.pressure_of(stress)
+        vol = integrator.volume_of(box)
+        kt = integrator.KB_EV * self.temp_k
+        d_eps = beta / self.tau_fs * (p - p0) * dt \
+            + jnp.sqrt(2.0 * kt * beta / (vol * self.tau_fs) * dt) \
+            * jax.random.normal(sub, ())
+        mu = jnp.clip(jnp.exp(d_eps / 3.0),
+                      1.0 / self.max_scale, self.max_scale)
+        return box * mu, pos * mu, vel / mu, {"key": key}
+
+
 # ========================================================== Simulation API
 
 @dataclasses.dataclass(frozen=True)
 class SimulationSpec:
     """Everything that defines a single-process MD run.
 
-    Replaces the legacy ``driver.run_md`` kwarg pile: the force model and
-    the ensemble are first-class values, so a new scenario is a new spec —
-    not an edit to the scan bodies. ``engine`` in {"outer", "scan",
-    "python"} selects the stepping machinery (see ``md/driver.py``).
+    Replaces the legacy ``driver.run_md`` kwarg pile: the force model, the
+    ensemble and the barostat are first-class values, so a new scenario is
+    a new spec — not an edit to the scan bodies. ``engine`` in {"outer",
+    "scan", "python"} selects the stepping machinery (see ``md/driver.py``).
+
+    ``ensemble`` also accepts a registry name (e.g. ``"npt_berendsen"``,
+    resolved with ``temp_k``/``pressure_gpa``): the NPT names expand to a
+    thermostat + the matching barostat, so
+    ``SimulationSpec(pot, ensemble="npt_berendsen", pressure_gpa=1.0)`` is
+    the one-line constant-pressure run. An explicit ``barostat`` always
+    wins; ``pressure_gpa`` alone attaches a :class:`BerendsenBarostat` at
+    that target to whatever ensemble is set.
     """
 
     potential: Potential
-    ensemble: Ensemble = NVE()
+    ensemble: Any = NVE()        # Ensemble, or a registry name (str)
     steps: int = 99
     dt_fs: float = 1.0
     temp_k: float = 330.0        # Maxwell-Boltzmann init temperature
@@ -376,6 +495,19 @@ class SimulationSpec:
     engine: str = "scan"
     chunk_segments: int = 8
     escalation: Optional[Any] = None    # stepper.EscalationPolicy
+    barostat: Optional[Barostat] = None
+    pressure_gpa: Optional[float] = None   # target pressure convenience
+
+    def __post_init__(self):
+        ens, baro = self.ensemble, self.barostat
+        if isinstance(ens, str):
+            ens, named_baro = resolve_ensemble(ens, temp_k=self.temp_k,
+                                               pressure_gpa=self.pressure_gpa)
+            baro = baro or named_baro
+        if baro is None and self.pressure_gpa is not None:
+            baro = BerendsenBarostat(pressure_gpa=self.pressure_gpa)
+        object.__setattr__(self, "ensemble", ens)
+        object.__setattr__(self, "barostat", baro)
 
 
 class Simulation:
@@ -397,7 +529,9 @@ class Simulation:
 # ========================================================= CLI registries
 
 POTENTIAL_CHOICES = ("dp", "quintic", "cheb", "lj")
-ENSEMBLE_CHOICES = ("nve", "nvt_langevin", "berendsen")
+ENSEMBLE_CHOICES = ("nve", "nvt_langevin", "berendsen", "npt_berendsen",
+                    "npt_scr")
+BAROSTAT_CHOICES = ("none", "berendsen", "scr")
 
 
 def make_potential(name: str, cfg: Optional[DPConfig] = None,
@@ -428,7 +562,9 @@ def make_potential(name: str, cfg: Optional[DPConfig] = None,
 
 def make_ensemble(name: str, temp_k: float = 330.0, friction: float = 0.1,
                   tau_fs: float = 100.0, seed: int = 0) -> Ensemble:
-    """Build an Ensemble from a CLI name."""
+    """Build an Ensemble from a CLI name (NVE/NVT names only — the NPT
+    names pair a thermostat WITH a barostat; resolve those through
+    :func:`resolve_ensemble`)."""
     if name == "nve":
         return NVE()
     if name == "nvt_langevin":
@@ -436,4 +572,64 @@ def make_ensemble(name: str, temp_k: float = 330.0, friction: float = 0.1,
     if name == "berendsen":
         return BerendsenThermostat(temp_k=temp_k, tau_fs=tau_fs)
     raise ValueError(f"unknown ensemble {name!r} "
-                     f"(choices: {ENSEMBLE_CHOICES})")
+                     f"(choices: {ENSEMBLE_CHOICES}; NPT names need "
+                     f"resolve_ensemble — they carry a barostat too)")
+
+
+def make_barostat(name: str, pressure_gpa: float = 0.0,
+                  tau_fs: float = 500.0,
+                  compressibility_per_gpa: float = 0.01,
+                  temp_k: float = 330.0,
+                  seed: int = 0) -> Optional[Barostat]:
+    """Build a Barostat from a CLI name ("none" -> None: fixed box)."""
+    if name == "none":
+        return None
+    if name == "berendsen":
+        return BerendsenBarostat(
+            pressure_gpa=pressure_gpa, tau_fs=tau_fs,
+            compressibility_per_gpa=compressibility_per_gpa)
+    if name == "scr":
+        return StochasticCellRescaleBarostat(
+            pressure_gpa=pressure_gpa, tau_fs=tau_fs,
+            compressibility_per_gpa=compressibility_per_gpa,
+            temp_k=temp_k, seed=seed)
+    raise ValueError(f"unknown barostat {name!r} "
+                     f"(choices: {BAROSTAT_CHOICES})")
+
+
+def resolve_ensemble(name: str, temp_k: float = 330.0, friction: float = 0.1,
+                     tau_fs: float = 100.0, seed: int = 0,
+                     pressure_gpa: Optional[float] = None,
+                     ptau_fs: float = 500.0,
+                     compressibility_per_gpa: float = 0.01,
+                     ) -> Tuple[Ensemble, Optional[Barostat]]:
+    """Resolve a CLI ensemble name into ``(ensemble, barostat)``.
+
+    The NPT names expand to the matching thermostat + barostat pair:
+    ``npt_berendsen`` = Berendsen thermostat + Berendsen barostat (the
+    weak-coupling classic), ``npt_scr`` = Langevin thermostat + stochastic
+    cell rescale (the correct-ensemble pair). NVE/NVT names return
+    ``(ensemble, None)`` — UNLESS an explicit ``pressure_gpa`` is given,
+    which attaches a Berendsen barostat at that target (the same policy as
+    ``SimulationSpec.pressure_gpa``: an explicit pressure is a request for
+    pressure coupling, never to be silently ignored).
+    """
+    if name == "npt_berendsen":
+        return (BerendsenThermostat(temp_k=temp_k, tau_fs=tau_fs),
+                make_barostat("berendsen",
+                              pressure_gpa=pressure_gpa or 0.0,
+                              tau_fs=ptau_fs,
+                              compressibility_per_gpa=compressibility_per_gpa))
+    if name == "npt_scr":
+        return (NVTLangevin(temp_k=temp_k, friction=friction, seed=seed),
+                make_barostat("scr", pressure_gpa=pressure_gpa or 0.0,
+                              tau_fs=ptau_fs,
+                              compressibility_per_gpa=compressibility_per_gpa,
+                              temp_k=temp_k, seed=seed))
+    barostat = None
+    if pressure_gpa is not None:
+        barostat = make_barostat(
+            "berendsen", pressure_gpa=pressure_gpa, tau_fs=ptau_fs,
+            compressibility_per_gpa=compressibility_per_gpa)
+    return (make_ensemble(name, temp_k=temp_k, friction=friction,
+                          tau_fs=tau_fs, seed=seed), barostat)

@@ -117,13 +117,19 @@ def pad_sel_for(cfg: DPConfig, n_shards: int) -> DPConfig:
 # --------------------------------------------------------------- halo pieces
 
 def _pack_boundary(pos, typ, mask, lo_side: bool, spec: DomainSpec,
-                   slab_lo: jax.Array):
-    """Select owned atoms within rcut of a slab face into a fixed buffer."""
+                   slab_lo: jax.Array, slab_width=None):
+    """Select owned atoms within rcut of a slab face into a fixed buffer.
+
+    ``slab_width`` may be a TRACED value derived from the carried box (the
+    barostat moves the box, the slab faces move with it); ``None`` keeps the
+    launch-time geometry."""
+    if slab_width is None:
+        slab_width = spec.slab_width
     x_rel = pos[:, 0] - slab_lo
     if lo_side:
         sel = mask & (x_rel < spec.rcut_halo)
     else:
-        sel = mask & (x_rel > spec.slab_width - spec.rcut_halo)
+        sel = mask & (x_rel > slab_width - spec.rcut_halo)
     # stable-compact selected atoms to the buffer front
     order = jnp.argsort(jnp.where(sel, 0, 1), stable=True)
     hc = spec.halo_capacity
@@ -135,11 +141,14 @@ def _pack_boundary(pos, typ, mask, lo_side: bool, spec: DomainSpec,
     return buf_pos, buf_typ, valid, idx, overflow
 
 
-def _halo_exchange(pos, typ, mask, spec: DomainSpec, slab_lo, axis: str):
+def _halo_exchange(pos, typ, mask, spec: DomainSpec, slab_lo, axis: str,
+                   box=None, slab_width=None):
     """Ghost atoms from both x-neighbor slabs (periodic ring).
 
     Returns (ghost_pos (2*hc, 3) shifted into this slab's frame, ghost_typ,
-    ghost_mask, reverse-comm bookkeeping, overflow).
+    ghost_mask, reverse-comm bookkeeping, overflow). ``box``/``slab_width``
+    carry the DYNAMIC geometry when the box rides in the scan carry;
+    ``None`` keeps the launch-time DomainSpec values.
     """
     n = spec.n_slabs
     right = [(i, (i + 1) % n) for i in range(n)]
@@ -147,9 +156,9 @@ def _halo_exchange(pos, typ, mask, spec: DomainSpec, slab_lo, axis: str):
 
     # pack my boundary layers
     lo_pos, lo_typ, lo_valid, lo_idx, ovf_l = _pack_boundary(
-        pos, typ, mask, True, spec, slab_lo)
+        pos, typ, mask, True, spec, slab_lo, slab_width)
     hi_pos, hi_typ, hi_valid, hi_idx, ovf_r = _pack_boundary(
-        pos, typ, mask, False, spec, slab_lo)
+        pos, typ, mask, False, spec, slab_lo, slab_width)
 
     # my low boundary -> left neighbor's ghost; high -> right neighbor
     from_right = jax.tree.map(lambda t: jax.lax.ppermute(t, axis, left),
@@ -158,7 +167,7 @@ def _halo_exchange(pos, typ, mask, spec: DomainSpec, slab_lo, axis: str):
                              (hi_pos, hi_typ, hi_valid))
 
     # shift ghosts into this slab's coordinate frame (periodic in x)
-    box_x = spec.box[0]
+    box_x = spec.box[0] if box is None else box[0]
     idx_s = jax.lax.axis_index(axis)
     fl_pos, fl_typ, fl_valid = from_left
     fr_pos, fr_typ, fr_valid = from_right
@@ -232,21 +241,35 @@ def make_local_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
                        decomp: str = "slots",
                        neighbor: str = "brute",
                        potential: Optional[api.Potential] = None,
-                       ensemble: Optional[api.Ensemble] = None):
+                       ensemble: Optional[api.Ensemble] = None,
+                       barostat: Optional[api.Barostat] = None):
     """Per-shard MD step body — the code that runs INSIDE shard_map.
 
-    Returns ``step_local(params, pos, vel, typ, mask, ens) ->
-    ((pos, vel, typ, mask, ens), thermo)`` on squeezed per-slab arrays.
-    Fully traceable (halo exchange, rebuild, force, integration — no host
-    branches), so it embeds equally in the per-segment engine
+    Returns ``step_local(params, pos, vel, typ, mask, ens, box, baro) ->
+    ((pos, vel, typ, mask, ens, box, baro), thermo)`` on squeezed per-slab
+    arrays. Fully traceable (halo exchange, rebuild, force, integration —
+    no host branches), so it embeds equally in the per-segment engine
     (:func:`make_distributed_md_step`) and in the whole-trajectory two-level
     scan (:func:`make_outer_md_program`).
 
-    The step is closed over a ``(potential, ensemble)`` pair from the
-    composable API (``md/api.py``); ``cfg``/``impl`` remain as the legacy
-    spelling for DP + NVE (``potential=None`` wraps them in a
+    The step is closed over a ``(potential, ensemble, barostat)`` triple
+    from the composable API (``md/api.py``); ``cfg``/``impl`` remain as the
+    legacy spelling for DP + NVE (``potential=None`` wraps them in a
     :class:`api.DPPotential`). The ensemble's extra state ``ens`` (RNG key,
     ...) rides in the scan carry next to the slab arrays.
+
+    The BOX ``box`` (3,) is the dynamic, globally-replicated simulation
+    box: the slab geometry (slab width, faces, min-image wrap) is derived
+    from it every step, and a traced check that the rescaled slab still
+    covers ``rcut_halo`` reports through ``thermo["geom_overflow"]`` (the
+    existing overflow-flag channel — the PR-3 launch-time assert, evaluated
+    against the CARRIED box at every rebuild). Each step also computes the
+    slab virial via the strain derivative ``W = -dE/d(eps)`` of its own
+    energy terms (one joint backward pass with the forces), psums it into
+    the global stress, and — when a ``barostat`` is closed over — applies
+    the affine box/position rescale identically on every slab (the barostat
+    state ``baro`` is REPLICATED, so every slab draws the same SCR noise
+    and the global box stays consistent).
 
     decomp:
       "slots" — model shards take complementary NEIGHBOR-SLOT slices of every
@@ -262,6 +285,7 @@ def make_local_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
     spec.validate()
     potential = potential or api.DPPotential(cfg, impl=impl)
     ensemble = ensemble or api.NVE()
+    n_slabs_f = float(spec.n_slabs)
     n_model = mesh.shape[model_axis]
     if isinstance(spatial_axis, str):
         n_spatial = mesh.shape[spatial_axis]
@@ -287,10 +311,6 @@ def make_local_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
     cfg_layout = pot_p.layout_cfg()
     rc2 = float(spec.rcut_halo) ** 2
     mass_table = jnp.asarray(masses, jnp.float32)
-    # min-image applies to y/z only: x periodicity is ghost-resolved, and a
-    # full-box x-wrap would alias ghost images back onto local atoms when
-    # box_x/2 < rcut + slab_width (1-2 slab configurations).
-    box = jnp.asarray([1e30, spec.box[1], spec.box[2]], jnp.float32)
     assert spec.atom_capacity % n_model == 0 or decomp == "slots"
     atom_slice = spec.atom_capacity // n_model
     n_centers = atom_slice if decomp == "atoms" else spec.atom_capacity
@@ -300,39 +320,55 @@ def make_local_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
         nbr_fn = slab_cells.make_slab_neighbor_fn(
             cfg_layout, spec.box, spec.slab_width, spec.rcut_halo, n_centers)
 
-    def slot_energy(pos_all, nlist_slice, typ_all, mask_local, params):
+    def slot_energy(pos_all, eps, nlist_slice, typ_all, mask_local, params,
+                    boxm):
         """Sum of local-atom energies from a neighbor-slot SLICE; psum over
         the model axis completes the per-atom terms (neighbor
-        decomposition)."""
+        decomposition). ``eps`` applies an affine strain to every pair
+        vector: its gradient at zero is minus this shard's virial."""
         n_local = mask_local.shape[0]
         nmask = nlist_slice >= 0
         j = jnp.maximum(nlist_slice, 0)
         rij = pos_all[j] - pos_all[:n_local, None, :]
-        rij = rij - box * jnp.round(rij / box)
+        rij = rij - boxm * jnp.round(rij / boxm)
         rij = jnp.where(nmask[..., None], rij, 0.0)
+        rij = rij + rij @ eps
         e_i = pot_local.atomic_energy(params, rij, nmask, typ_all[:n_local],
                                       axis_name=model_axis)
         return jnp.sum(e_i * mask_local)
 
-    def atoms_energy(pos_all, nlist, typ_centers, mask_centers, start, params):
+    def atoms_energy(pos_all, eps, nlist, typ_centers, mask_centers, start,
+                     params, boxm):
         """Sum of energies for an ATOM slice (full neighbor lists)."""
         nmask = nlist >= 0
         j = jnp.maximum(nlist, 0)
         centers = jax.lax.dynamic_slice_in_dim(pos_all, start, n_centers, 0)
         rij = pos_all[j] - centers[:, None, :]
-        rij = rij - box * jnp.round(rij / box)
+        rij = rij - boxm * jnp.round(rij / boxm)
         rij = jnp.where(nmask[..., None], rij, 0.0)
+        rij = rij + rij @ eps
         e_i = pot_p.atomic_energy(params, rij, nmask, typ_centers)
         return jnp.sum(e_i * mask_centers)
 
-    def step_local(params, pos, vel, typ, mask, ens):
+    def step_local(params, pos, vel, typ, mask, ens, box, baro):
         cap = pos.shape[0]
         idx_s = jax.lax.axis_index(spatial_axis)
-        slab_lo = idx_s.astype(jnp.float32) * spec.slab_width
+        slab_width = box[0] / n_slabs_f
+        slab_lo = idx_s.astype(jnp.float32) * slab_width
+        # min-image applies to y/z only: x periodicity is ghost-resolved,
+        # and a full-box x-wrap would alias ghost images back onto local
+        # atoms when box_x/2 < rcut + slab_width (1-2 slab configurations).
+        boxm = jnp.stack([jnp.float32(1e30), box[1], box[2]])
+        # the PR-3 cutoff-vs-halo assert, traced against the CARRIED box:
+        # a barostat-shrunk slab narrower than rcut_halo silently loses
+        # pairs (ghosts only cover one neighbor slab), so it must surface
+        # through the overflow-flag channel, not a launch-time assert.
+        geom_ovf = (slab_width < spec.rcut_halo).astype(jnp.int32)
+        eps0 = jnp.zeros((3, 3), pos.dtype)
 
         # -- halo exchange ------------------------------------------------
         ghost_pos, ghost_typ, ghost_mask, book, h_ovf = _halo_exchange(
-            pos, typ, mask, spec, slab_lo, spatial_axis)
+            pos, typ, mask, spec, slab_lo, spatial_axis, box, slab_width)
         pos_all = jnp.concatenate([pos, ghost_pos], axis=0)
         typ_all = jnp.concatenate([typ, ghost_typ], axis=0)
         mask_all = jnp.concatenate([mask, ghost_mask], axis=0)
@@ -342,31 +378,35 @@ def make_local_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
             start = jax.lax.axis_index(model_axis).astype(jnp.int32) * atom_slice
             if nbr_fn is not None:
                 nlist, n_ovf = nbr_fn(pos_all, typ_all, mask_all, slab_lo,
-                                      start)
+                                      start, box=box, slab_width=slab_width)
             else:
                 nlist_full, n_ovf = _slab_neighbors(
-                    pos_all, typ_all, mask_all, cfg_layout, rc2, cap, box)
+                    pos_all, typ_all, mask_all, cfg_layout, rc2, cap, boxm)
                 nlist = jax.lax.dynamic_slice_in_dim(
                     nlist_full, start, n_centers, 0)
             typ_c = jax.lax.dynamic_slice_in_dim(typ, start, n_centers, 0)
             mask_c = jax.lax.dynamic_slice_in_dim(mask, start, n_centers, 0)
 
-            def e_fn(p_all):
-                return atoms_energy(p_all, nlist, typ_c, mask_c, start, params)
+            def e_fn(p_all, eps):
+                return atoms_energy(p_all, eps, nlist, typ_c, mask_c, start,
+                                    params, boxm)
 
-            e_slice, de_dpos = jax.value_and_grad(e_fn)(pos_all)
+            e_slice, (de_dpos, de_deps) = jax.value_and_grad(
+                e_fn, argnums=(0, 1))(pos_all, eps0)
             # disjoint atom slices: plain psums assemble globals
             e_local = jax.lax.psum(e_slice, model_axis)
             force_all = -jax.lax.psum(de_dpos, model_axis)
+            virial = -jax.lax.psum(de_deps, model_axis)
             force = force_all[:cap] + _reverse_force_comm(
                 force_all[cap:], book, spatial_axis, spec.n_slabs, cap)
         else:
             # -- model axis slices neighbor SLOTS (psum'd T matrices) -------
             if nbr_fn is not None:
-                nlist, n_ovf = nbr_fn(pos_all, typ_all, mask_all, slab_lo, 0)
+                nlist, n_ovf = nbr_fn(pos_all, typ_all, mask_all, slab_lo, 0,
+                                      box=box, slab_width=slab_width)
             else:
                 nlist, n_ovf = _slab_neighbors(pos_all, typ_all, mask_all,
-                                               cfg_layout, rc2, cap, box)
+                                               cfg_layout, rc2, cap, boxm)
             parts = []
             for (a, b) in cfg_layout.sel_sections():
                 w = (b - a) // n_model
@@ -377,17 +417,20 @@ def make_local_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
             # Grad target is e / n_model: the psum-of-T transpose sums the
             # identical cotangents of all model shards (measured n_model x
             # overcount otherwise); dividing restores per-slice exactness.
-            def e_fn(p_all):
-                return slot_energy(p_all, nlist_slice, typ_all, mask,
-                                   params) / n_model
+            def e_fn(p_all, eps):
+                return slot_energy(p_all, eps, nlist_slice, typ_all, mask,
+                                   params, boxm) / n_model
 
-            e_frac, de_dpos = jax.value_and_grad(e_fn)(pos_all)
+            e_frac, (de_dpos, de_deps) = jax.value_and_grad(
+                e_fn, argnums=(0, 1))(pos_all, eps0)
             e_local = e_frac * n_model
             force_all = -de_dpos          # includes ghost contributions
             force = force_all[:cap] + _reverse_force_comm(
                 force_all[cap:], book, spatial_axis, spec.n_slabs, cap)
-            # model axis holds complementary neighbor slices: reduce forces.
+            # model axis holds complementary neighbor slices: reduce forces
+            # (and this shard's slot contribution to the virial).
             force = jax.lax.psum(force, model_axis)
+            virial = -jax.lax.psum(de_deps, model_axis)
 
         # -- ensemble step (kick-drift-kick + thermostat finalize) ----------
         m_vec = mass_table[typ]
@@ -400,14 +443,32 @@ def make_local_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
 
         ke = 0.5 * jnp.sum(mass_table[typ] * mask * jnp.sum(vel * vel, -1)) \
             / integrator.FORCE_TO_ACC
+        # -- global stress + barostat --------------------------------------
+        # per-slab virial/kinetic tensors psum to the GLOBAL stress; every
+        # slab computes the identical tensor, so the (replicated) barostat
+        # rescale keeps box/positions consistent across the mesh.
+        kin = integrator.kinetic_tensor(vel, m_vec, mask)
+        vol = integrator.volume_of(box)
+        stress = integrator.stress_tensor(
+            jax.lax.psum(kin, spatial_axis),
+            jax.lax.psum(virial, spatial_axis), vol)
+        if barostat is not None:
+            box, pos, vel, baro = barostat.apply(box, pos, vel, stress,
+                                                 baro, dt_fs)
+            pos = jnp.where(mask[:, None], pos, 0.0)
+
         thermo = {
             "pe": jax.lax.psum(e_local, spatial_axis),
             "ke": jax.lax.psum(ke, spatial_axis),
             "n_atoms": jax.lax.psum(jnp.sum(mask), spatial_axis),
             "halo_overflow": jax.lax.pmax(h_ovf, spatial_axis),
             "nbr_overflow": jax.lax.pmax(n_ovf, spatial_axis),
+            "geom_overflow": jax.lax.pmax(geom_ovf, spatial_axis),
+            "stress": stress,
+            "press": integrator.pressure_of(stress),
+            "vol": vol,
         }
-        return (pos, vel, typ, mask, ens), thermo
+        return (pos, vel, typ, mask, ens, box, baro), thermo
 
     return step_local
 
@@ -417,7 +478,8 @@ def _state_pspec(spatial_axis) -> SlabState:
                      typ=P(spatial_axis), mask=P(spatial_axis))
 
 
-THERMO_KEYS = ("pe", "ke", "n_atoms", "halo_overflow", "nbr_overflow")
+THERMO_KEYS = ("pe", "ke", "n_atoms", "halo_overflow", "nbr_overflow",
+               "geom_overflow", "stress", "press", "vol")
 
 
 def init_ensemble_state(ensemble: api.Ensemble, n_slabs: int, mesh: Mesh,
@@ -441,36 +503,42 @@ def make_distributed_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
                              decomp: str = "slots",
                              neighbor: str = "brute",
                              potential: Optional[api.Potential] = None,
-                             ensemble: Optional[api.Ensemble] = None):
-    """Build the shard_map'd ``(params, SlabState, ens) ->
-    ((SlabState, ens), thermo)`` step.
+                             ensemble: Optional[api.Ensemble] = None,
+                             barostat: Optional[api.Barostat] = None):
+    """Build the shard_map'd ``(params, SlabState, ens, box, baro) ->
+    ((SlabState, ens, box, baro), thermo)`` step.
 
     The returned function expects SlabState (and ensemble-state) leaves
-    stacked over slabs and sharded P(spatial_axis) on dim 0; params
-    replicated. ``ens`` comes from :func:`init_ensemble_state` (an empty
-    pytree for stateless ensembles). See :func:`make_local_md_step` for the
-    potential/ensemble/decomp/neighbor options.
+    stacked over slabs and sharded P(spatial_axis) on dim 0; params, the
+    dynamic ``box`` (3,) and the barostat state ``baro`` replicated (the
+    box is global — every slab sees and rescales the same one). ``ens``
+    comes from :func:`init_ensemble_state` (an empty pytree for stateless
+    ensembles); ``baro`` from ``barostat.init_state()`` (``()`` without a
+    barostat). See :func:`make_local_md_step` for the potential/ensemble/
+    barostat/decomp/neighbor options.
     """
     step_local = make_local_md_step(
         cfg, spec, mesh, masses, dt_fs, impl=impl, spatial_axis=spatial_axis,
         model_axis=model_axis, decomp=decomp, neighbor=neighbor,
-        potential=potential, ensemble=ensemble)
+        potential=potential, ensemble=ensemble, barostat=barostat)
 
-    def step(params, state: SlabState, ens):
+    def step(params, state: SlabState, ens, box, baro):
         # shard_map keeps the sharded slab dim at local size 1 — squeeze it.
         pos, vel, typ, mask = (x[0] for x in state)
         ens_l = jax.tree.map(lambda x: x[0], ens)
-        (pos, vel, typ, mask, ens_l), thermo = step_local(
-            params, pos, vel, typ, mask, ens_l)
+        (pos, vel, typ, mask, ens_l, box, baro), thermo = step_local(
+            params, pos, vel, typ, mask, ens_l, box, baro)
         new_state = SlabState(pos=pos[None], vel=vel[None], typ=typ[None],
                               mask=mask[None])
-        return (new_state, jax.tree.map(lambda x: x[None], ens_l)), thermo
+        return (new_state, jax.tree.map(lambda x: x[None], ens_l),
+                box, baro), thermo
 
     state_spec = _state_pspec(spatial_axis)
     thermo_spec = {k: P() for k in THERMO_KEYS}
     return shard_map(step, mesh=mesh,
-                     in_specs=(P(), state_spec, P(spatial_axis)),
-                     out_specs=((state_spec, P(spatial_axis)), thermo_spec),
+                     in_specs=(P(), state_spec, P(spatial_axis), P(), P()),
+                     out_specs=((state_spec, P(spatial_axis), P(), P()),
+                                thermo_spec),
                      check_vma=False)
 
 
@@ -479,24 +547,32 @@ def make_distributed_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
 def make_segment_runner(step_fn, donate: Optional[bool] = None):
     """Run the shard_map'd MD step through the shared segment engine.
 
-    ``step_fn`` is the ``(params, SlabState, ens) -> ((SlabState, ens),
-    thermo)`` step from :func:`make_distributed_md_step`. The returned
-    callable ``run(state, params, n_steps, ens=())`` executes ``n_steps``
-    steps as ONE jitted ``lax.scan`` dispatch over the ``(state, ens)``
-    carry (thermo comes back stacked ``(n_steps,)``) and returns
-    ``((state, ens), thermo)`` — the host touches the device once per
-    rebuild/migration segment, the same engine the single-process driver
-    uses, keeping halo-exchange cadence (per step, inside the scan) and
-    migration cadence (per segment, outside) aligned by construction.
+    ``step_fn`` is the ``(params, SlabState, ens, box, baro) ->
+    ((SlabState, ens, box, baro), thermo)`` step from
+    :func:`make_distributed_md_step`. The returned callable
+    ``run(state, params, n_steps, ens=(), box=None, baro=())`` executes
+    ``n_steps`` steps as ONE jitted ``lax.scan`` dispatch over the
+    ``(state, ens, box, baro)`` carry (thermo comes back stacked
+    ``(n_steps,)``) and returns ``((state, ens, box, baro), thermo)`` — the
+    host touches the device once per rebuild/migration segment, the same
+    engine the single-process driver uses, keeping halo-exchange cadence
+    (per step, inside the scan) and migration cadence (per segment,
+    outside) aligned by construction. ``box`` is required: the dynamic box
+    rides in the carry now (pass the DomainSpec launch box for fixed-box
+    runs).
     """
     from repro.md import stepper
 
     engine = stepper.SegmentEngine(
-        lambda carry, params: step_fn(params, carry[0], carry[1]),
-        donate=donate)
+        lambda carry, params: step_fn(params, *carry), donate=donate)
 
-    def run(state: SlabState, params, n_steps: int, ens=()):
-        return engine.run((state, ens), n_steps, params)
+    def run(state: SlabState, params, n_steps: int, ens=(), box=None,
+            baro=()):
+        if box is None:
+            raise ValueError("make_segment_runner: pass the (3,) box — the "
+                             "dynamic box rides in the scan carry")
+        return engine.run((state, ens, stepper.pack_box(box), baro),
+                          n_steps, params)
 
     return run
 
@@ -507,17 +583,32 @@ def check_segment_thermo(thermo) -> None:
     Replaces the seed's per-step ``int(...)`` host syncs: flags for the whole
     segment arrive in one fetch. Capacity overflow in a capacity-bounded
     collective drops atoms silently, so a hard error is the only safe exit —
-    escalation here means re-partitioning with larger capacities.
+    escalation here means re-partitioning with larger capacities. The
+    ``geom_overflow`` flag is the traced cutoff-vs-halo check: the carried
+    box shrank until a slab no longer covers ``rcut_halo`` (pairs would be
+    silently lost) — re-partition with fewer slabs or a smaller cutoff.
     """
+    if "geom_overflow" in thermo and \
+            int(np.max(np.asarray(thermo["geom_overflow"]))) > 0:
+        raise RuntimeError(
+            "geom_overflow: the carried box shrank below the slab "
+            "decomposition's cutoff+halo geometry (slab width < rcut_halo); "
+            "pairs beyond the single-neighbor halo would be silently lost — "
+            "re-partition with fewer slabs (DomainSpec)")
     keys = ("halo_overflow", "nbr_overflow") + \
         (("mig_overflow",) if "mig_overflow" in thermo else ())
     for key in keys:
         worst = int(np.max(np.asarray(thermo[key])))
         if worst > 0:
-            raise RuntimeError(
-                f"{key} by {worst} atoms during segment; rerun with larger "
-                f"halo/atom capacities (DomainSpec) — capacity-bounded "
-                f"exchanges drop atoms past capacity")
+            msg = (f"{key} by {worst} atoms during segment; rerun with "
+                   f"larger halo/atom capacities (DomainSpec) — "
+                   f"capacity-bounded exchanges drop atoms past capacity")
+            if worst >= int(neighbors.GRID_INVALID):
+                msg = (f"{key}: the carried box moved past the static slab "
+                       f"cell grid's validity (a cell dimension < "
+                       f"rcut_halo) — the stencil would miss pairs; "
+                       f"re-partition from the current box")
+            raise RuntimeError(msg)
 
 
 # ------------------------------------------------------------------ migration
@@ -529,7 +620,8 @@ def check_segment_thermo(thermo) -> None:
 # path is what lets make_outer_md_program fold migration into the
 # two-level scanned trajectory.
 
-def split_migrants(pos, vel, typ, mask, spec: DomainSpec, slab_lo):
+def split_migrants(pos, vel, typ, mask, spec: DomainSpec, slab_lo,
+                   slab_width=None):
     """Partition a slab into compacted stayers + fixed-capacity send packets.
 
     Returns ``(stayers, left_pkt, right_pkt, pack_ovf)`` where ``stayers``
@@ -539,11 +631,15 @@ def split_migrants(pos, vel, typ, mask, spec: DomainSpec, slab_lo):
     packet is ``(pos (hc, 3), vel, typ, valid)`` bound for that x-neighbor.
     Send capacity is ``spec.halo_capacity`` slots per side; excess migrants
     are reported in ``pack_ovf``, never silently dropped into the exchange.
+    ``slab_width`` may be traced (carried-box geometry); ``None`` keeps the
+    launch-time value.
     """
+    if slab_width is None:
+        slab_width = spec.slab_width
     hc = spec.halo_capacity
     x = pos[:, 0] - slab_lo
     go_left = mask & (x < 0)
-    go_right = mask & (x >= spec.slab_width)
+    go_right = mask & (x >= slab_width)
     stay = mask & ~go_left & ~go_right
 
     def pack(sel):
@@ -566,7 +662,7 @@ def split_migrants(pos, vel, typ, mask, spec: DomainSpec, slab_lo):
     return stayers, left_pkt, right_pkt, jnp.maximum(l_ovf, r_ovf)
 
 
-def merge_arrivals(stayers, in_l, in_r, idx_s, spec: DomainSpec):
+def merge_arrivals(stayers, in_l, in_r, idx_s, spec: DomainSpec, box=None):
     """Append arrival packets to the compacted stayers of one slab.
 
     ``in_l`` / ``in_r`` are the packets received from the left / right
@@ -576,10 +672,11 @@ def merge_arrivals(stayers, in_l, in_r, idx_s, spec: DomainSpec):
     ends. Returns ``((pos, vel, typ, mask), overflow)`` with arrivals
     placed at the first free slots; atom-capacity overflow is reported and
     the excess arrivals dropped by ``mode="drop"`` (the flag makes the
-    chunk retry/abort — the data is never silently wrong).
+    chunk retry/abort — the data is never silently wrong). ``box`` carries
+    the dynamic geometry; ``None`` keeps the launch-time DomainSpec box.
     """
     n = spec.n_slabs
-    box_x = spec.box[0]
+    box_x = spec.box[0] if box is None else box[0]
     pos_c, vel_c, typ_c, mask_c, n_stay = stayers
     cap = pos_c.shape[0]
     # periodic wrap for migrants crossing the box ends:
@@ -610,26 +707,30 @@ def merge_arrivals(stayers, in_l, in_r, idx_s, spec: DomainSpec):
     return (pos_c, vel_c, typ_c, mask_c), m_ovf
 
 
-def _migrate_local(pos, vel, typ, mask, spec: DomainSpec, spatial_axis):
+def _migrate_local(pos, vel, typ, mask, spec: DomainSpec, spatial_axis,
+                   box=None):
     """Per-shard migration: split -> ppermute both ways -> merge.
 
     Fully traceable with static shapes — safe under ``lax.scan`` (the outer
     program folds this into the scanned trajectory at segment cadence).
     Returns squeezed ``((pos, vel, typ, mask), local_overflow)``; callers
-    pmax the flag over the spatial axis.
+    pmax the flag over the spatial axis. ``box`` carries the dynamic
+    geometry (slab boundaries move with the barostat); ``None`` keeps the
+    launch-time DomainSpec values.
     """
     n = spec.n_slabs
     idx_s = jax.lax.axis_index(spatial_axis)
-    slab_lo = idx_s.astype(jnp.float32) * spec.slab_width
+    slab_width = spec.slab_width if box is None else box[0] / float(n)
+    slab_lo = idx_s.astype(jnp.float32) * slab_width
     stayers, left_pkt, right_pkt, pack_ovf = split_migrants(
-        pos, vel, typ, mask, spec, slab_lo)
+        pos, vel, typ, mask, spec, slab_lo, slab_width)
     rightp = [(i, (i + 1) % n) for i in range(n)]
     leftp = [(i, (i - 1) % n) for i in range(n)]
     in_l = jax.tree.map(lambda t: jax.lax.ppermute(t, spatial_axis, rightp),
                         right_pkt)     # from left slab
     in_r = jax.tree.map(lambda t: jax.lax.ppermute(t, spatial_axis, leftp),
                         left_pkt)      # from right slab
-    merged, m_ovf = merge_arrivals(stayers, in_l, in_r, idx_s, spec)
+    merged, m_ovf = merge_arrivals(stayers, in_l, in_r, idx_s, spec, box)
     return merged, jnp.maximum(pack_ovf, m_ovf)
 
 
@@ -639,18 +740,28 @@ def make_migration_step(spec: DomainSpec, mesh: Mesh,
 
     Runs at neighbor-rebuild cadence. Capacity-bounded ppermute sends with
     overflow flags; periodic wrap in x is applied to the migrated copies.
+    ``migrate(state, box=None)``: pass the current carried box when a
+    barostat moved it (slab boundaries scale with the box).
     """
 
-    def migrate(state: SlabState):
+    def migrate(state: SlabState, box):
         pos, vel, typ, mask = (x[0] for x in state)
         (pos, vel, typ, mask), ovf = _migrate_local(
-            pos, vel, typ, mask, spec, spatial_axis)
+            pos, vel, typ, mask, spec, spatial_axis, box)
         return SlabState(pos=pos[None], vel=vel[None], typ=typ[None],
                          mask=mask[None]), jax.lax.pmax(ovf, spatial_axis)
 
     state_spec = _state_pspec(spatial_axis)
-    return shard_map(migrate, mesh=mesh, in_specs=(state_spec,),
-                     out_specs=(state_spec, P()), check_vma=False)
+    sharded = shard_map(migrate, mesh=mesh, in_specs=(state_spec, P()),
+                        out_specs=(state_spec, P()), check_vma=False)
+
+    def migrate_entry(state: SlabState, box=None):
+        from repro.md import stepper
+        if box is None:
+            box = stepper.pack_box(spec.box)
+        return sharded(state, jnp.asarray(box))
+
+    return migrate_entry
 
 
 # ------------------------------------------- whole-trajectory outer program
@@ -658,14 +769,16 @@ def make_migration_step(spec: DomainSpec, mesh: Mesh,
 class OuterMDProgram:
     """Distributed MD with migration + rebuild folded into ONE program.
 
-    ``run(state, params, n_segments, seg_len, ens)`` executes
+    ``run(state, params, n_segments, seg_len, ens, box, baro)`` executes
     ``n_segments x seg_len`` steps as a single jitted shard_map dispatch: a
     two-level ``lax.scan`` per shard — outer over segments (each segment
     starts with scan-safe migration, then the halo-exchange + rebuild +
-    ensemble step scanned ``seg_len`` times inside; the ensemble's extra
-    state rides in the carry). Host round-trips drop from one per segment
-    to one per chunk; overflow flags (halo, neighbor, migration) come back
-    stacked in the thermo fetch and are checked by
+    ensemble step scanned ``seg_len`` times inside; the ensemble state, the
+    DYNAMIC box and the barostat state ride in the carry through both scan
+    levels — migration and the per-step slab geometry read the box the
+    barostat actually produced). Host round-trips drop from one per segment
+    to one per chunk; overflow flags (halo, neighbor, geometry, migration)
+    come back stacked in the thermo fetch and are checked by
     :func:`check_segment_thermo` once per chunk.
 
     Jitted programs are cached per ``(n_segments, seg_len)``; ``build``
@@ -679,12 +792,15 @@ class OuterMDProgram:
                  model_axis: str = "model", decomp: str = "atoms",
                  neighbor: str = "cells", donate: Optional[bool] = None,
                  potential: Optional[api.Potential] = None,
-                 ensemble: Optional[api.Ensemble] = None):
+                 ensemble: Optional[api.Ensemble] = None,
+                 barostat: Optional[api.Barostat] = None):
         self._step_local = make_local_md_step(
             cfg, spec, mesh, masses, dt_fs, impl=impl,
             spatial_axis=spatial_axis, model_axis=model_axis, decomp=decomp,
-            neighbor=neighbor, potential=potential, ensemble=ensemble)
+            neighbor=neighbor, potential=potential, ensemble=ensemble,
+            barostat=barostat)
         self.ensemble = ensemble or api.NVE()
+        self.barostat = barostat
         self._spec = spec
         self._mesh = mesh
         self._spatial_axis = spatial_axis
@@ -702,57 +818,79 @@ class OuterMDProgram:
         return init_ensemble_state(self.ensemble, self._spec.n_slabs,
                                    self._mesh, self._spatial_axis)
 
+    def init_box(self):
+        """The (3,) dynamic-box carry entry from the launch DomainSpec."""
+        from repro.md import stepper
+        return stepper.pack_box(self._spec.box)
+
+    def init_barostat_state(self):
+        """REPLICATED barostat state (every slab draws the same noise)."""
+        return (self.barostat.init_state()
+                if self.barostat is not None else ())
+
     def build(self, n_segments: int, seg_len: int):
-        """The un-jitted shard_map'd ``(params, state, ens) ->
-        (state, ens, thermo)``.
+        """The un-jitted shard_map'd ``(params, state, ens, box, baro) ->
+        (state, ens, box, baro, thermo)``.
 
         thermo leaves are stacked ``(n_segments, seg_len)`` (psum'd scalars
-        per step) plus ``mig_overflow`` stacked ``(n_segments,)``. The
-        ensemble state threads through BOTH scan levels in the carry.
+        per step; the stress tensor stacks ``(n_segments, seg_len, 3, 3)``)
+        plus ``mig_overflow`` stacked ``(n_segments,)``. The ensemble,
+        box and barostat state thread through BOTH scan levels in the
+        carry.
         """
         spec, spatial_axis = self._spec, self._spatial_axis
         step_local = self._step_local
 
-        def program(params, state: SlabState, ens):
+        def program(params, state: SlabState, ens, box, baro):
             pos, vel, typ, mask = (x[0] for x in state)
             ens_l = jax.tree.map(lambda x: x[0], ens)
 
             def seg_body(st, _):
-                pos, vel, typ, mask, e = st
+                pos, vel, typ, mask, e, box, baro = st
                 (pos, vel, typ, mask), m_ovf = _migrate_local(
-                    pos, vel, typ, mask, spec, spatial_axis)
+                    pos, vel, typ, mask, spec, spatial_axis, box)
 
                 def step_body(s, _):
                     return step_local(params, *s)
 
-                st, th = jax.lax.scan(step_body, (pos, vel, typ, mask, e),
+                st, th = jax.lax.scan(step_body,
+                                      (pos, vel, typ, mask, e, box, baro),
                                       None, length=seg_len)
                 th["mig_overflow"] = jax.lax.pmax(m_ovf, spatial_axis)
                 return st, th
 
-            (pos, vel, typ, mask, ens_l), th = jax.lax.scan(
-                seg_body, (pos, vel, typ, mask, ens_l), None,
+            (pos, vel, typ, mask, ens_l, box, baro), th = jax.lax.scan(
+                seg_body, (pos, vel, typ, mask, ens_l, box, baro), None,
                 length=n_segments)
             new_state = SlabState(pos=pos[None], vel=vel[None], typ=typ[None],
                                   mask=mask[None])
-            return new_state, jax.tree.map(lambda x: x[None], ens_l), th
+            return (new_state, jax.tree.map(lambda x: x[None], ens_l),
+                    box, baro, th)
 
         return shard_map(program, mesh=self._mesh,
-                         in_specs=(P(), self.state_pspec, P(spatial_axis)),
+                         in_specs=(P(), self.state_pspec, P(spatial_axis),
+                                   P(), P()),
                          out_specs=(self.state_pspec, P(spatial_axis),
-                                    self.thermo_pspec),
+                                    P(), P(), self.thermo_pspec),
                          check_vma=False)
 
     def run(self, state: SlabState, params, n_segments: int, seg_len: int,
-            ens=()):
-        """One jitted dispatch; returns ``(state, ens, thermo)``."""
+            ens=(), box=None, baro=()):
+        """One jitted dispatch; returns ``(state, ens, box, baro, thermo)``.
+
+        ``box`` defaults to the launch DomainSpec box on the first chunk;
+        pass the returned box (and ``baro``) back in on the next chunk so
+        the dynamic geometry carries across dispatches.
+        """
+        if box is None:
+            box = self.init_box()
         key = (n_segments, seg_len)
         fn = self._jits.get(key)
         if fn is None:
             fn = jax.jit(self.build(n_segments, seg_len),
                          donate_argnums=(1,) if self._donate else ())
             self._jits[key] = fn
-        return fn(params, state, ens)
+        return fn(params, state, ens, jnp.asarray(box), baro)
 
 
 def make_outer_md_program(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 KB_EV = 8.617333262e-5            # eV / K
 # (eV/A)/amu in A/fs^2
 FORCE_TO_ACC = 9.64853329045e-3
+# 1 eV/A^3 in GPa (pressure/stress unit conversion)
+EV_A3_TO_GPA = 160.21766208
 
 
 class MDState(NamedTuple):
@@ -49,6 +51,37 @@ def temperature(vel: jax.Array, masses: jax.Array,
     w = amask if amask is not None else jnp.ones(vel.shape[0])
     ndof = 3.0 * jnp.maximum(jnp.sum(w), 1.0)
     return 2.0 * kinetic_energy(vel, masses, amask) / (ndof * KB_EV)
+
+
+def kinetic_tensor(vel: jax.Array, masses: jax.Array,
+                   amask: Optional[jax.Array] = None) -> jax.Array:
+    """(3, 3) kinetic stress contribution sum_i m_i v_i (x) v_i in eV.
+
+    Its trace is 2x the kinetic energy; together with the configurational
+    virial W it forms the instantaneous stress sigma = (K + W) / V.
+    """
+    w = amask if amask is not None else jnp.ones(vel.shape[0])
+    mv = (masses * w)[:, None] * vel
+    return jnp.einsum("ia,ib->ab", mv, vel) / FORCE_TO_ACC
+
+
+def stress_tensor(kin: jax.Array, virial: jax.Array,
+                  volume: jax.Array) -> jax.Array:
+    """Instantaneous stress sigma = (sum m v(x)v + W) / V in eV/A^3.
+
+    Sign convention: positive pressure = compression (trace(sigma)/3 is the
+    instantaneous pressure of the usual virial theorem)."""
+    return (kin + virial) / volume
+
+
+def pressure_of(stress: jax.Array) -> jax.Array:
+    """Scalar instantaneous pressure P = trace(sigma) / 3 (eV/A^3)."""
+    return jnp.trace(stress) / 3.0
+
+
+def volume_of(box: jax.Array) -> jax.Array:
+    """Orthorhombic box volume (A^3) from edge lengths (3,)."""
+    return jnp.prod(box)
 
 
 def verlet_half_kick(vel, force, masses, dt):

@@ -33,6 +33,14 @@ class NeighborSpec:
         return int(sum(self.sel))
 
 
+#: Overflow-flag sentinel: the DYNAMIC box has shrunk below the static cell
+#: grid's validity (a cell dimension < rcut_nbr, so the 27-stencil no longer
+#: covers the cutoff). Escalating slot capacities cannot fix this — the
+#: driver must re-derive the grid from the current box. Far above any real
+#: capacity excess, so ``flag >= GRID_INVALID`` is unambiguous.
+GRID_INVALID = np.int32(1 << 20)
+
+
 def _min_image(rij: jax.Array, box: Optional[jax.Array]) -> jax.Array:
     if box is None:
         return rij
@@ -113,11 +121,22 @@ def brute_force_neighbors(
     return _brute_force_neighbors(pos, atype, spec, box, amask)
 
 
-def make_cell_list_fn(spec: NeighborSpec, box: np.ndarray, jit: bool = True):
-    """Build an O(N) neighbor function for a fixed orthorhombic box.
+def make_cell_list_fn(spec: NeighborSpec, box: np.ndarray, jit: bool = True,
+                      dynamic_box: bool = False):
+    """Build an O(N) neighbor function for an orthorhombic box.
 
-    The box is static: cell counts must be compile-time constants. Falls back
-    to brute force when the box is too small for 3 cells per dimension.
+    Static form (default): ``fn(pos, atype, amask=None)`` with the box baked
+    in. Dynamic form (``dynamic_box=True``): ``fn(pos, atype, box,
+    amask=None)`` — the cell COUNTS stay compile-time constants derived from
+    the reference ``box`` given here, while cell sizes and the min-image
+    wrap are recomputed from the traced per-call box (the box that rides in
+    the scan carry under a barostat). If the traced box shrinks until a cell
+    dimension no longer covers ``rcut_nbr`` (27-stencil would miss pairs),
+    the overflow flag returns ``>= GRID_INVALID``: the driver must re-derive
+    the grid from the current box — capacity escalation cannot fix geometry.
+
+    Falls back to brute force when the reference box is too small for 3
+    cells per dimension (always box-correct: min-image uses the traced box).
 
     With ``jit=False`` the raw traceable function is returned instead of a
     jitted wrapper — the form the outer engine embeds inside its segment
@@ -126,24 +145,32 @@ def make_cell_list_fn(spec: NeighborSpec, box: np.ndarray, jit: bool = True):
     """
     ncell = np.maximum(np.floor(box / spec.rcut_nbr).astype(int), 1)
     if np.any(ncell < 3):
+        if dynamic_box:
+            def small_dyn_fn(pos, atype, box_t, amask=None):
+                return _brute_force_neighbors(pos, atype, spec,
+                                              jnp.asarray(box_t), amask)
+            return jax.jit(small_dyn_fn) if jit else small_dyn_fn
+
         def small_fn(pos, atype, amask=None):
             return _brute_force_neighbors(
                 pos, atype, spec, jnp.asarray(box), amask)
         return jax.jit(small_fn) if jit else small_fn
 
     ncells = int(np.prod(ncell))
-    cell_size = box / ncell
     offsets = np.stack(
         np.meshgrid(*[[-1, 0, 1]] * 3, indexing="ij"), axis=-1
     ).reshape(-1, 3)                                   # (27, 3)
 
-    def fn(pos, atype, amask=None):
+    def core(pos, atype, box_t, amask):
         n = pos.shape[0]
         cap = spec.cell_capacity
-        cidx3 = jnp.clip(
-            (pos / jnp.asarray(cell_size)).astype(jnp.int32),
-            0, jnp.asarray(ncell - 1),
-        )
+        box_t = jnp.asarray(box_t)
+        cell_size = box_t / jnp.asarray(ncell, box_t.dtype)
+        # grid validity under a traced box: every cell dim must still cover
+        # the cutoff, or the +/-1 stencil silently misses pairs
+        grid_bad = jnp.any(cell_size < spec.rcut_nbr).astype(jnp.int32)
+        cidx3 = jnp.clip((pos / cell_size).astype(jnp.int32),
+                         0, jnp.asarray(ncell - 1))
         cflat = (cidx3[:, 0] * ncell[1] + cidx3[:, 1]) * ncell[2] + cidx3[:, 2]
         if amask is not None:
             cflat = jnp.where(amask > 0, cflat, ncells)   # park invalid atoms
@@ -172,11 +199,20 @@ def make_cell_list_fn(spec: NeighborSpec, box: np.ndarray, jit: bool = True):
         self_mask = cand == jnp.arange(n, dtype=jnp.int32)[:, None]
         cand = jnp.where(self_mask, -1, cand)
 
-        rij = _min_image(pos[cand.clip(0)] - pos[:, None, :], jnp.asarray(box))
+        rij = _min_image(pos[cand.clip(0)] - pos[:, None, :], box_t)
         d2 = jnp.where(cand >= 0, jnp.sum(rij * rij, axis=-1), jnp.inf)
         ctype = atype[cand.clip(0)]
         nlist, sec_overflow = _pack_sections(
             cand, d2, ctype, spec, spec.rcut_nbr**2)
-        return nlist, jnp.maximum(sec_overflow, cell_overflow)
+        overflow = jnp.maximum(sec_overflow, cell_overflow)
+        return nlist, jnp.maximum(overflow, grid_bad * GRID_INVALID)
+
+    if dynamic_box:
+        def dyn_fn(pos, atype, box_t, amask=None):
+            return core(pos, atype, box_t, amask)
+        return jax.jit(dyn_fn) if jit else dyn_fn
+
+    def fn(pos, atype, amask=None):
+        return core(pos, atype, box, amask)
 
     return jax.jit(fn) if jit else fn

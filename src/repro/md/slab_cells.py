@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.types import DPConfig
-from repro.md.neighbors import pack_type_sections
+from repro.md.neighbors import GRID_INVALID, pack_type_sections
 
 
 def make_slab_neighbor_fn(cfg: DPConfig, box: Tuple[float, float, float],
@@ -25,10 +25,18 @@ def make_slab_neighbor_fn(cfg: DPConfig, box: Tuple[float, float, float],
                           n_centers: int, cell_capacity: int = 96):
     """Neighbor lists for ``n_centers`` center atoms of a slab array.
 
-    Returns fn(pos_all, typ_all, mask_all, slab_lo, center_start) ->
-    (nlist (n_centers, nsel), overflow); ``center_start`` may be traced
-    (model shards pass axis_index * n_centers in atom-decomposition mode).
-    pos_all = owned atoms then ghosts; nlist indexes pos_all rows.
+    Returns fn(pos_all, typ_all, mask_all, slab_lo, center_start,
+    box=None, slab_width=None) -> (nlist (n_centers, nsel), overflow);
+    ``center_start`` may be traced (model shards pass axis_index *
+    n_centers in atom-decomposition mode). pos_all = owned atoms then
+    ghosts; nlist indexes pos_all rows.
+
+    The cell COUNTS are static, derived from the launch-time ``box`` /
+    ``slab_width`` given here; the optional per-call ``box``/``slab_width``
+    (traced values from the carried box under a barostat) move the cell
+    SIZES. If the carried box shrinks until a cell dimension no longer
+    covers ``rc_halo`` (the stencil would miss pairs), the overflow flag
+    returns ``>= GRID_INVALID`` — geometry, not capacity.
     """
     rc2 = rc_halo * rc_halo
     # static cell grid over the slab+ghost x-range and the full y/z box
@@ -36,7 +44,9 @@ def make_slab_neighbor_fn(cfg: DPConfig, box: Tuple[float, float, float],
     ncx = max(int(np.floor(x_span / rc_halo)), 1)
     ncy = max(int(np.floor(box[1] / rc_halo)), 1)
     ncz = max(int(np.floor(box[2] / rc_halo)), 1)
-    csx, csy, csz = x_span / ncx, box[1] / ncy, box[2] / ncz
+    csx0, csy0, csz0 = x_span / ncx, box[1] / ncy, box[2] / ncz
+    box_static = (float(box[0]), float(box[1]), float(box[2]))
+    slab_width_static = float(slab_width)
     ncells = ncx * ncy * ncz
 
     def _allowed(n, periodic):
@@ -52,10 +62,24 @@ def make_slab_neighbor_fn(cfg: DPConfig, box: Tuple[float, float, float],
         for oy in _allowed(ncy, True)
         for oz in _allowed(ncz, True)
     ])
-    # y/z min-image only: x is ghost-resolved (see domain.py)
-    boxj = jnp.asarray([1e30, box[1], box[2]], jnp.float32)
-
-    def fn(pos_all, typ_all, mask_all, slab_lo, center_start=0):
+    def fn(pos_all, typ_all, mask_all, slab_lo, center_start=0,
+           box=None, slab_width=None):
+        if box is None:
+            csx, csy, csz = csx0, csy0, csz0
+            grid_bad = jnp.zeros((), jnp.int32)
+            boxj = jnp.asarray([1e30, box_static[1], box_static[2]],
+                               jnp.float32)
+        else:
+            # dynamic geometry from the carried box: static counts, traced
+            # sizes — flag the grid when a cell stops covering rc_halo
+            sw = slab_width if slab_width is not None else slab_width_static
+            csx = (sw + 2 * rc_halo) / ncx
+            csy = box[1] / ncy
+            csz = box[2] / ncz
+            grid_bad = ((csx < rc_halo) | (csy < rc_halo)
+                        | (csz < rc_halo)).astype(jnp.int32)
+            # y/z min-image only: x is ghost-resolved (see domain.py)
+            boxj = jnp.stack([jnp.float32(1e30), box[1], box[2]])
         n_all = pos_all.shape[0]
         # slab-frame x (shifted so the low ghost shell starts at 0)
         xf = pos_all[:, 0] - slab_lo + rc_halo
@@ -108,6 +132,7 @@ def make_slab_neighbor_fn(cfg: DPConfig, box: Tuple[float, float, float],
 
         valid = (cand >= 0) & (d2 < rc2) & center_mask[:, None]
         nlist, sec_ovf = pack_type_sections(cand, valid, ctype, cfg.sel)
-        return nlist, jnp.maximum(sec_ovf, cell_ovf)
+        overflow = jnp.maximum(sec_ovf, cell_ovf)
+        return nlist, jnp.maximum(overflow, grid_bad * GRID_INVALID)
 
     return fn

@@ -25,9 +25,14 @@ through :class:`SegmentEngine`, so halo-exchange/migration cadence aligns
 with segment boundaries by construction.
 
 The scanned step bodies are generic over the composable simulation API
-(``md/api.py``): :func:`make_md_step` closes over a ``(potential,
-ensemble)`` pair, and the engine caches key on those (hashable) adapters —
+(``md/api.py``): :func:`make_md_step` closes over a ``(potential, ensemble,
+barostat)`` triple, and the engine caches key on those (hashable) adapters —
 the legacy ``make_vv_step``/``vv_*_engine`` names remain as DP+NVE shims.
+The simulation BOX rides in the scan carry (not the closure): a barostat
+rescales it inside the scanned program, the per-step thermo streams the
+stress tensor/pressure/volume next to pe/ke, and the neighbor search takes
+the box as a traced argument over a static cell grid (``GRID_INVALID``
+flags a box that outgrew its grid).
 """
 
 from __future__ import annotations
@@ -132,10 +137,34 @@ def _cell_list_fn(spec: neighbors.NeighborSpec,
     return neighbors.make_cell_list_fn(spec, np.asarray(box_key, float))
 
 
+@functools.lru_cache(maxsize=None)
+def _dyn_cell_list_fn(spec: neighbors.NeighborSpec,
+                      ncell_key: Tuple[int, ...]):
+    """Cached jitted DYNAMIC-box neighbor fn, keyed by the static cell GRID.
+
+    The box rides in as a traced argument, so a barostat moving the box
+    does NOT recompile the search — only a box change large enough to alter
+    the cell counts (``floor(box / rcut_nbr)``) keys a new program. The
+    reference box is ``(k + 0.5) * rcut_nbr``: ``k * rcut_nbr`` can floor
+    back to ``k - 1`` in float, silently building a different grid than
+    the key claims (and a key of 3 would flip to the brute-force path).
+    """
+    ref_box = (np.asarray(ncell_key, float) + 0.5) * spec.rcut_nbr
+    return neighbors.make_cell_list_fn(spec, ref_box, dynamic_box=True)
+
+
+def grid_key_for(spec: neighbors.NeighborSpec,
+                 box: np.ndarray) -> Tuple[int, ...]:
+    """The static cell-grid signature of ``box`` (see ``_dyn_cell_list_fn``)."""
+    return tuple(int(n) for n in np.maximum(
+        np.floor(np.asarray(box, float) / spec.rcut_nbr).astype(int), 1))
+
+
 def build_neighbors_escalating(
     cfg: DPConfig, spec: neighbors.NeighborSpec, box: np.ndarray,
     pos: jax.Array, typ: jax.Array,
     policy: Optional[EscalationPolicy] = None,
+    dynamic_box: bool = False,
 ) -> NeighborBuild:
     """Build the neighbor list; on overflow escalate capacities and retry.
 
@@ -146,13 +175,22 @@ def build_neighbors_escalating(
     returned ``cfg_run`` carries the escalated ``sel`` so the model sees the
     matching slot layout; callers must evaluate it with
     ``nsel_norm=cfg.nsel`` to keep the trained descriptor normalization.
+
+    ``dynamic_box=True`` routes through the dynamic-box search (the grid is
+    re-derived from the CURRENT ``box`` on every call, so the grid is valid
+    by construction and only an actual cell-count change recompiles) — the
+    form the drivers use now that the box rides in the scan carry.
     """
     policy = policy or EscalationPolicy()
-    box_key = tuple(float(b) for b in np.asarray(box).reshape(-1))
+    box_np = np.asarray(box, float).reshape(-1)
     escalations = 0
     worst = None
     for _ in range(policy.max_attempts):
-        nlist, ovf = _cell_list_fn(spec, box_key)(pos, typ)
+        if dynamic_box:
+            fn = _dyn_cell_list_fn(spec, grid_key_for(spec, box_np))
+            nlist, ovf = fn(pos, typ, jnp.asarray(box_np, jnp.float32))
+        else:
+            nlist, ovf = _cell_list_fn(spec, tuple(box_np))(pos, typ)
         worst = int(ovf) if worst is None else max(worst, int(ovf))
         if int(ovf) <= 0:
             cfg_run = (cfg if tuple(spec.sel) == tuple(cfg.sel)
@@ -176,36 +214,56 @@ class MDCarry(NamedTuple):
 
     ``ens`` is the ensemble's extra state (RNG key, ...); stateless
     ensembles carry an empty pytree, which adds zero ops to the program.
+    ``box`` is the DYNAMIC simulation box: it rides in the carry (not the
+    closure) so a barostat can move it inside the scanned program; ``baro``
+    is the barostat's extra state (RNG key for stochastic cell rescale).
     """
     pos: jax.Array     # (N, 3) A
     vel: jax.Array     # (N, 3) A/fs
     force: jax.Array   # (N, 3) eV/A
     ens: Any = ()      # ensemble state pytree
+    box: Any = None    # (3,) A dynamic box (None: legacy fixed-box callers)
+    baro: Any = ()     # barostat state pytree
 
 
 #: Legacy name (pre composable-API); ``ens`` defaults keep 3-arg calls valid.
 VVCarry = MDCarry
 
 
-def make_md_step(potential: api.Potential, ensemble: api.Ensemble) -> Callable:
+def make_md_step(potential: api.Potential, ensemble: api.Ensemble,
+                 barostat: Optional[api.Barostat] = None) -> Callable:
     """One kick-drift-(force)-kick step of ``ensemble`` under ``potential``.
 
-    ``(MDCarry, params, nlist, typ, box, masses, dt) -> (MDCarry, thermo)``
-    — the scanned body shared by :func:`md_segment_engine` (inner loop only)
-    and :func:`md_outer_engine` (whole-trajectory two-level scan). For NVE
-    the thermostat finalize is the identity, so the program is op-identical
-    to the pre-API Velocity-Verlet step (bit-exact trajectories)."""
+    ``(MDCarry, params, nlist, typ, masses, dt) -> (MDCarry, thermo)`` —
+    the scanned body shared by :func:`md_segment_engine` (inner loop only)
+    and :func:`md_outer_engine` (whole-trajectory two-level scan). The box
+    comes from the CARRY: after the thermostat finalize the ``barostat``
+    (if any) turns the instantaneous stress into an affine box + position
+    rescale that the next step sees. Per-step thermo streams pe/ke plus the
+    pressure observables (stress tensor (3, 3) eV/A^3, scalar pressure,
+    volume) — the virial every potential already computes, promoted from
+    computed-and-dropped to a stacked on-device observable. For NVE the
+    thermostat finalize is the identity and ``barostat=None`` adds no box
+    update ops, so trajectories stay bit-exact with the fixed-box step."""
 
-    def md_step(carry: MDCarry, params, nlist, typ, box, masses, dt):
-        pos, vel, f, ens = carry
+    def md_step(carry: MDCarry, params, nlist, typ, masses, dt):
+        pos, vel, f, ens, box, baro = carry
         vel = ensemble.half_kick(vel, f, masses, dt)
         pos = ensemble.drift(pos, vel, dt, box)
-        e, f_new, _ = potential.energy_forces(params, pos, typ, nlist,
-                                              box=box)
+        e, f_new, stats = potential.energy_forces(params, pos, typ, nlist,
+                                                  box=box)
         vel = ensemble.half_kick(vel, f_new, masses, dt)
         vel, ens = ensemble.finalize(vel, masses, dt, ens)
         ke = integrator.kinetic_energy(vel, masses)
-        return MDCarry(pos, vel, f_new, ens), {"pe": e, "ke": ke}
+        vol = integrator.volume_of(box)
+        stress = integrator.stress_tensor(
+            integrator.kinetic_tensor(vel, masses), stats["virial"], vol)
+        if barostat is not None:
+            box, pos, vel, baro = barostat.apply(box, pos, vel, stress,
+                                                 baro, dt)
+        thermo = {"pe": e, "ke": ke, "stress": stress,
+                  "press": integrator.pressure_of(stress), "vol": vol}
+        return MDCarry(pos, vel, f_new, ens, box, baro), thermo
 
     return md_step
 
@@ -218,15 +276,18 @@ def make_vv_step(cfg_run: DPConfig, impl: Optional[str],
 
 @functools.lru_cache(maxsize=None)
 def md_segment_engine(potential: api.Potential, ensemble: api.Ensemble,
-                      donate: Optional[bool] = None) -> SegmentEngine:
+                      donate: Optional[bool] = None,
+                      barostat: Optional[api.Barostat] = None
+                      ) -> SegmentEngine:
     """Engine whose step is one full kick-drift-(force)-kick MD step.
 
-    Cached per (potential, ensemble) — hashable frozen adapters — so
-    repeated runs and capacity-escalation retries reuse compiled segments.
-    Everything array-valued (params, nlist, box, masses, dt) is a traced
-    aux arg.
+    Cached per (potential, ensemble, barostat) — hashable frozen adapters —
+    so repeated runs and capacity-escalation retries reuse compiled
+    segments. Everything array-valued (params, nlist, masses, dt) is a
+    traced aux arg; the box rides in the carry.
     """
-    return SegmentEngine(make_md_step(potential, ensemble), donate=donate)
+    return SegmentEngine(make_md_step(potential, ensemble, barostat),
+                         donate=donate)
 
 
 def vv_segment_engine(cfg_run: DPConfig, impl: Optional[str],
@@ -245,13 +306,18 @@ class OuterCarry(NamedTuple):
     ``overflow`` accumulates the worst neighbor-capacity excess seen by any
     on-device rebuild in the chunk; it is the ONLY value the host inspects —
     once per chunk of segments, not per segment. ``ens`` threads the
-    ensemble's extra state through the two-level scan.
+    ensemble's extra state through the two-level scan; ``box``/``baro``
+    thread the dynamic box and the barostat state, so the on-device rebuild
+    searches the box the barostat actually produced (a grid-validity
+    violation surfaces through ``overflow`` as ``neighbors.GRID_INVALID``).
     """
     pos: jax.Array       # (N, 3) A
     vel: jax.Array       # (N, 3) A/fs
     force: jax.Array     # (N, 3) eV/A
     overflow: jax.Array  # () int32
     ens: Any = ()        # ensemble state pytree
+    box: Any = None      # (3,) A dynamic box
+    baro: Any = ()       # barostat state pytree
 
 
 class OuterEngine:
@@ -289,33 +355,45 @@ class OuterEngine:
 @functools.lru_cache(maxsize=None)
 def md_outer_engine(potential: api.Potential, ensemble: api.Ensemble,
                     spec: neighbors.NeighborSpec,
-                    box_key: Tuple[float, ...],
-                    donate: Optional[bool] = None) -> OuterEngine:
+                    grid_key: Tuple[int, ...],
+                    donate: Optional[bool] = None,
+                    barostat: Optional[api.Barostat] = None) -> OuterEngine:
     """Outer engine for the single-process driver.
 
     Each scanned segment rebuilds the neighbor list ON DEVICE at the
-    segment-start positions (static-shape sort-based binning — the same
-    cell-list code the host path jits, embedded in the trace) and then runs
-    ``seg_len`` MD steps against it. Capacity overflow cannot branch
-    inside the trace; it accumulates in the carry and the driver checks it
-    once per chunk, retrying the whole chunk from a snapshot with
-    geometrically escalated capacities (``potential.sel`` == ``spec.sel``
-    and the potential's pinned normalization keep the physics fixed, so
-    escalation changes padding only). The ensemble state threads through
-    both scan levels in the carry.
+    segment-start positions AND the segment-start box from the carry
+    (static-shape sort-based binning with a static grid of ``grid_key``
+    cell counts — keying the cache on COUNTS, not raw box floats, so a
+    barostat-moved box reuses the compiled engine until the counts actually
+    change — traced cell sizes: the same cell-list code the host path
+    jits, embedded in the trace) and then runs ``seg_len`` MD steps against
+    it. Capacity overflow cannot branch inside the trace; it accumulates in
+    the carry and the driver checks it once per chunk, retrying the whole
+    chunk from a snapshot with geometrically escalated capacities
+    (``potential.sel`` == ``spec.sel`` and the potential's pinned
+    normalization keep the physics fixed, so escalation changes padding
+    only). A barostat-shrunk box that invalidates the static grid raises
+    the ``GRID_INVALID`` sentinel through the same flag; the driver then
+    re-derives the grid from the snapshot box instead of growing
+    capacities. The ensemble and barostat state thread through both scan
+    levels in the carry.
     """
-    nbr_fn = neighbors.make_cell_list_fn(
-        spec, np.asarray(box_key, float), jit=False)
-    md_step = make_md_step(potential, ensemble)
+    # (k + 0.5) * rcut floors back to exactly k cells (k * rcut can lose a
+    # cell to float rounding — see _dyn_cell_list_fn)
+    ref_box = (np.asarray(grid_key, float) + 0.5) * spec.rcut_nbr
+    nbr_fn = neighbors.make_cell_list_fn(spec, ref_box, jit=False,
+                                         dynamic_box=True)
+    md_step = make_md_step(potential, ensemble, barostat)
 
-    def outer_seg(carry: OuterCarry, seg_len: int,
-                  params, typ, box, masses, dt):
-        nlist, ovf = nbr_fn(carry.pos, typ)
-        inner = MDCarry(carry.pos, carry.vel, carry.force, carry.ens)
+    def outer_seg(carry: OuterCarry, seg_len: int, params, typ, masses, dt):
+        nlist, ovf = nbr_fn(carry.pos, typ, carry.box)
+        inner = MDCarry(carry.pos, carry.vel, carry.force, carry.ens,
+                        carry.box, carry.baro)
         inner, th = scan_segment(md_step, inner, seg_len,
-                                 params, nlist, typ, box, masses, dt)
+                                 params, nlist, typ, masses, dt)
         return OuterCarry(inner.pos, inner.vel, inner.force,
-                          jnp.maximum(carry.overflow, ovf), inner.ens), th
+                          jnp.maximum(carry.overflow, ovf), inner.ens,
+                          inner.box, inner.baro), th
 
     return OuterEngine(outer_seg, donate=donate)
 
@@ -327,7 +405,33 @@ def vv_outer_engine(cfg_run: DPConfig, impl: Optional[str],
                     donate: Optional[bool] = None) -> OuterEngine:
     """Legacy DP + NVE outer engine (shim over :func:`md_outer_engine`)."""
     return md_outer_engine(api.DPPotential(cfg_run, impl, nsel_norm),
-                           api.NVE(), spec, box_key, donate)
+                           api.NVE(), spec,
+                           grid_key_for(spec, np.asarray(box_key, float)),
+                           donate)
+
+
+def box_lengths(box) -> np.ndarray:
+    """Host-side (3,) orthorhombic edge lengths from a box spelling.
+
+    Accepts a length-3 vector or a DIAGONAL (3, 3) matrix; anything else
+    (triclinic cells, wrong sizes) raises instead of silently truncating —
+    a zero edge would turn into inf pressure and NaN min-images downstream.
+    """
+    a = np.asarray(box, np.float64).reshape(-1)
+    if a.size == 9:
+        m = a.reshape(3, 3)
+        if np.any(m != np.diag(np.diag(m))):
+            raise ValueError(f"non-orthorhombic box not supported: {m}")
+        a = np.diag(m)
+    if a.size != 3:
+        raise ValueError(f"box must be (3,) edge lengths or a diagonal "
+                         f"(3, 3) matrix, got shape {np.shape(box)}")
+    return a
+
+
+def pack_box(box) -> jnp.ndarray:
+    """The (3,) float32 dynamic-box carry entry from a host box spelling."""
+    return jnp.asarray(box_lengths(box).astype(np.float32))
 
 
 def chunk_schedule(steps: int, rebuild_every: int,
@@ -355,20 +459,29 @@ def chunk_schedule(steps: int, rebuild_every: int,
 
 
 def thermo_rows(pe: np.ndarray, ke: np.ndarray, step_base: int, steps: int,
-                thermo_every: int, n_atoms: int) -> List[Dict[str, float]]:
+                thermo_every: int, n_atoms: int,
+                press: Optional[np.ndarray] = None,
+                vol: Optional[np.ndarray] = None) -> List[Dict[str, float]]:
     """Host-side selection of thermo rows from a segment's stacked PE/KE.
 
     Matches the seed cadence: every ``thermo_every`` global steps plus the
-    final step. Temperature follows from KE and 3N degrees of freedom.
+    final step. Temperature follows from KE and 3N degrees of freedom; when
+    the stacked pressure/volume observables are given, each row gains
+    ``press_gpa`` (instantaneous pressure, GPa) and ``vol`` (A^3) columns.
     """
     rows = []
     ndof = 3.0 * max(n_atoms, 1)
     for i in range(len(pe)):
         gstep = step_base + i + 1
         if gstep % thermo_every == 0 or gstep == steps:
-            rows.append({
+            row = {
                 "step": gstep, "pe": float(pe[i]), "ke": float(ke[i]),
                 "etot": float(pe[i]) + float(ke[i]),
                 "temp": 2.0 * float(ke[i]) / (ndof * integrator.KB_EV),
-            })
+            }
+            if press is not None:
+                row["press_gpa"] = float(press[i]) * integrator.EV_A3_TO_GPA
+            if vol is not None:
+                row["vol"] = float(vol[i])
+            rows.append(row)
     return rows

@@ -24,10 +24,11 @@ def main():
     spec_n = neighbors.NeighborSpec(rcut_nbr=4.5, sel=(64,))
     nlist, _ = neighbors.brute_force_neighbors(
         jnp.asarray(pos, jnp.float32), jnp.asarray(typ), spec_n, jnp.asarray(box))
-    e_ref, f_ref, _ = dp_energy_forces(
+    e_ref, f_ref, w_ref = dp_energy_forces(
         params, cfg, jnp.asarray(pos, jnp.float32), nlist, jnp.asarray(typ),
         jnp.asarray(box, jnp.float32))
     f_ref = np.asarray(f_ref)
+    w_ref = np.asarray(w_ref)
 
     mesh = jax.make_mesh((4, 2), ("data", "model"))
     dspec = domain.DomainSpec(box=tuple(box), n_slabs=4, atom_capacity=48,
@@ -40,15 +41,20 @@ def main():
     params_r = jax.tree.map(
         lambda x: jax.device_put(x, NamedSharding(mesh, P())), params)
 
+    boxd = jnp.asarray(np.asarray(box, np.float32))
+    virials = {}
     for decomp in ("slots", "atoms"):
         for nbr in ("brute", "cells"):
             step_fn = domain.make_distributed_md_step(
                 cfg, dspec, mesh, (63.546,), dt_fs=1e-3, decomp=decomp,
                 neighbor=nbr)
-            (ns, _), th = step_fn(params_r, state0, ())
+            (ns, _, _, _), th = step_fn(params_r, state0, (), boxd, ())
             assert int(th["halo_overflow"]) <= 0, (decomp, nbr)
             assert int(th["nbr_overflow"]) <= 0, (decomp, nbr)
+            assert int(th["geom_overflow"]) <= 0, (decomp, nbr)
             assert int(th["n_atoms"]) == len(pos)
+            virials[(decomp, nbr)] = np.asarray(th["stress"]) * \
+                float(np.prod(box))
             pe = float(th["pe"])
             assert abs(pe - float(e_ref)) < 1e-4 + 1e-5 * abs(float(e_ref)), \
                 (decomp, nbr, pe, float(e_ref))
@@ -66,6 +72,16 @@ def main():
             assert err < 1e-6, (decomp, nbr, err)
             print(f"ok decomp={decomp} neighbor={nbr} pe_err="
                   f"{abs(pe - float(e_ref)):.2e} f_err={err:.2e}", flush=True)
+
+    # distributed virial (strain derivative of the shard energies, psum'd
+    # into thermo["stress"]) must match the single-process reference virial
+    # in every decomp x neighbor mode (the kinetic part is ~0 at dt=1e-3)
+    w_scale = max(1.0, float(np.max(np.abs(w_ref))))
+    for mode, w_dist in virials.items():
+        w_err = float(np.max(np.abs(w_dist - w_ref))) / w_scale
+        assert w_err < 2e-3, (mode, w_err, w_dist, w_ref)
+    print(f"ok distributed virial == single-process reference in "
+          f"{len(virials)} modes (rel err < 2e-3)", flush=True)
 
     # migration round-trip: push some atoms across the boundary and migrate
     state = state0
@@ -95,10 +111,11 @@ def main():
     state_py = state0
     pes = []
     for _ in range(n_steps):
-        (state_py, _), th = step_fn(params_r, state_py, ())
+        (state_py, _, _, _), th = step_fn(params_r, state_py, (), boxd, ())
         pes.append(float(th["pe"]))
     run_segment = domain.make_segment_runner(step_fn, donate=False)
-    (state_scan, _), th_seg = run_segment(state0, params_r, n_steps)
+    (state_scan, _, _, _), th_seg = run_segment(state0, params_r, n_steps,
+                                                box=boxd)
     domain.check_segment_thermo(th_seg)
     pe_seg = np.asarray(th_seg["pe"])
     assert pe_seg.shape == (n_steps,), pe_seg.shape
@@ -117,14 +134,16 @@ def main():
     n_segs, seg_len = 3, 4
     state_ref = state0
     for _ in range(n_segs):
-        state_ref, movf = mig(state_ref)            # migrate at seg start
+        state_ref, movf = mig(state_ref, boxd)      # migrate at seg start
         assert int(movf) <= 0
-        (state_ref, _), th_ref = run_segment(state_ref, params_r, seg_len)
+        (state_ref, _, _, _), th_ref = run_segment(state_ref, params_r,
+                                                   seg_len, box=boxd)
         domain.check_segment_thermo(th_ref)
     program = domain.make_outer_md_program(
         cfg, dspec, mesh, (63.546,), 0.5, decomp="atoms", neighbor="cells",
         donate=False)
-    state_out, _, th_out = program.run(state0, params_r, n_segs, seg_len)
+    state_out, _, _, _, th_out = program.run(state0, params_r, n_segs,
+                                             seg_len)
     domain.check_segment_thermo(th_out)
     assert np.asarray(th_out["pe"]).shape == (n_segs, seg_len)
     assert np.asarray(th_out["mig_overflow"]).shape == (n_segs,)
@@ -152,14 +171,74 @@ def main():
         cfg, dspec, mesh, (63.546,), 0.5, decomp="atoms", neighbor="cells",
         donate=False, ensemble=lang0)
     ens0 = prog_l0.init_ensemble_state()
-    state_l0, ens1, th_l0 = prog_l0.run(state0, params_r, n_segs, seg_len,
-                                        ens0)
+    state_l0, ens1, _, _, th_l0 = prog_l0.run(state0, params_r, n_segs,
+                                              seg_len, ens0)
     domain.check_segment_thermo(th_l0)
     assert bool(jnp.all(state_l0.pos == state_out.pos))
     assert bool(jnp.all(state_l0.vel == state_out.vel))
     assert bool(jnp.all(ens1["key"] == ens0["key"]))   # untouched at gamma=0
     print("ok zero-friction Langevin == NVE bit-exact through the "
           "distributed outer scan", flush=True)
+
+    # zero-coupling barostats: a STATIC no-op — the scanned program with a
+    # barostat closed over (box + dead state in the carry) must retrace the
+    # NVE trajectory bit-for-bit through the distributed two-level scan.
+    for baro0 in (api.BerendsenBarostat(compressibility_per_gpa=0.0),
+                  api.StochasticCellRescaleBarostat(
+                      compressibility_per_gpa=0.0, seed=5)):
+        prog_b0 = domain.make_outer_md_program(
+            cfg, dspec, mesh, (63.546,), 0.5, decomp="atoms",
+            neighbor="cells", donate=False, barostat=baro0)
+        state_b0, _, box_b0, _, th_b0 = prog_b0.run(
+            state0, params_r, n_segs, seg_len,
+            baro=prog_b0.init_barostat_state())
+        domain.check_segment_thermo(th_b0)
+        assert bool(jnp.all(state_b0.pos == state_out.pos)), type(baro0)
+        assert bool(jnp.all(state_b0.vel == state_out.vel)), type(baro0)
+        np.testing.assert_array_equal(np.asarray(box_b0),
+                                      np.asarray(boxd))
+    print("ok zero-coupling barostats == NVE bit-exact through the "
+          "distributed outer scan (box static in the carry)", flush=True)
+
+    # live NPT through the distributed outer scan: Berendsen barostat on an
+    # UNDER-pressured start (w_ref trace < 0 here) targeting a higher
+    # pressure must shrink the box; every slab agrees on the carried box,
+    # migration keeps atoms owned, and the geometry check stays quiet.
+    p_now = float(np.trace(w_ref)) / 3.0 / float(np.prod(box)) \
+        * integrator.EV_A3_TO_GPA
+    baro_live = api.BerendsenBarostat(pressure_gpa=p_now + 4.0, tau_fs=50.0,
+                                      compressibility_per_gpa=0.01)
+    prog_npt = domain.make_outer_md_program(
+        cfg, dspec, mesh, (63.546,), 0.5, decomp="atoms", neighbor="cells",
+        donate=False, barostat=baro_live,
+        ensemble=api.BerendsenThermostat(temp_k=330.0, tau_fs=50.0))
+    state_npt, _, box_npt, _, th_npt = prog_npt.run(
+        state0, params_r, n_segs, seg_len,
+        baro=prog_npt.init_barostat_state())
+    domain.check_segment_thermo(th_npt)
+    box_npt = np.asarray(box_npt)
+    assert np.all(box_npt < np.asarray(boxd)), (box_npt, np.asarray(boxd))
+    assert int(jnp.sum(state_npt.mask)) == len(pos)
+    press_trace = np.asarray(th_npt["press"]).reshape(-1) \
+        * integrator.EV_A3_TO_GPA
+    assert np.all(np.isfinite(press_trace))
+    print(f"ok distributed NPT: box {np.asarray(boxd)[0]:.3f} -> "
+          f"{box_npt[0]:.3f} A toward P0={p_now + 4.0:.2f} GPa "
+          f"(P {press_trace[0]:+.2f} -> {press_trace[-1]:+.2f} GPa)",
+          flush=True)
+
+    # the traced cutoff-vs-halo check: a box below n_slabs * rcut_halo must
+    # raise through the overflow channel (geom_overflow), not run silently
+    bad_box = jnp.asarray([4 * 4.0, boxd[1], boxd[2]], jnp.float32)
+    _, _, _, _, th_bad = program.run(state0, params_r, 1, 2, box=bad_box)
+    try:
+        domain.check_segment_thermo(th_bad)
+    except RuntimeError as e:
+        assert "geom_overflow" in str(e), e
+        print("ok geom_overflow: carried box below slab halo geometry is "
+              "caught by the traced check", flush=True)
+    else:
+        raise AssertionError("geom_overflow violation not flagged")
 
     # LJ potential + finite-friction Langevin: the full non-DP seam runs
     # distributed (halo + migration + rebuild + noise per slab) and cools a
@@ -170,8 +249,8 @@ def main():
         donate=False, potential=lj,
         ensemble=api.NVTLangevin(temp_k=330.0, friction=0.05, seed=3))
     ens_lj = prog_lj.init_ensemble_state()
-    state_lj, ens_lj, th_lj = prog_lj.run(state0, {}, n_segs, seg_len,
-                                          ens_lj)
+    state_lj, ens_lj, _, _, th_lj = prog_lj.run(state0, {}, n_segs, seg_len,
+                                                ens_lj)
     domain.check_segment_thermo(th_lj)
     assert int(jnp.sum(state_lj.mask)) == len(pos)
     assert np.all(np.isfinite(np.asarray(th_lj["pe"])))

@@ -1,0 +1,366 @@
+"""Constant-pressure MD: the virial/stress subsystem + NPT barostats.
+
+What must hold for the pressure subsystem to be safe to build on:
+  * the virial every potential streams IS the strain derivative of its
+    energy: LJ's analytic virial matches a finite difference of E under
+    affine box strain, and the DP virial agrees across implementation
+    rungs (previously only a (3, 3) shape was asserted);
+  * a ZERO-coupling barostat is a static no-op: box + dead state ride the
+    carry, the trajectory is BIT-exact NVE/NVT on every engine (the NPT
+    analogue of the zero-friction-Langevin proof; the distributed twin
+    lives in tests/distributed/run_md_dist.py);
+  * a live Berendsen barostat drives a 2x-overpressured LJ box
+    monotonically toward the target pressure, with the volume responding
+    in the right direction, on the fused engines;
+  * the 99-step copper/LJ protocol runs as NPT on all three engines with
+    the box evolving in the scan carry;
+  * the dynamic-box neighbor machinery flags (never silently truncates) a
+    box that outgrew its static cell grid.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import dp_model
+from repro.md import api, driver, integrator, lattice, neighbors
+
+
+def _lj_box(nx=3, jitter=0.0, seed=0):
+    pos, typ, box = lattice.fcc_copper(nx, nx, nx)
+    if jitter:
+        rng = np.random.default_rng(seed)
+        pos = np.mod(pos + rng.normal(0, jitter, pos.shape), box)
+    lj = api.LJPotential(sel=(64,), rcut_lj=4.0)
+    return lj, pos, typ, box
+
+
+def _sim_kw(**over):
+    kw = dict(steps=40, dt_fs=1.0, temp_k=100.0, skin=0.5,
+              rebuild_every=10, thermo_every=20)
+    kw.update(over)
+    return kw
+
+
+# ----------------------------------------------------- virial correctness
+
+def _energy_under_strain(lj, pos, typ, box, eps_scalar):
+    """Total LJ energy of the ISOTROPICALLY strained configuration:
+    pos' = (1 + eps) pos, box' = (1 + eps) box, neighbor rij recomputed."""
+    scale = 1.0 + eps_scalar
+    posj = jnp.asarray(pos * scale, jnp.float32)
+    boxj = jnp.asarray(np.asarray(box) * scale, jnp.float32)
+    spec = neighbors.NeighborSpec(rcut_nbr=lj.rcut + 1.0, sel=lj.sel)
+    nlist, ovf = neighbors.brute_force_neighbors(posj, jnp.asarray(typ),
+                                                 spec, boxj)
+    assert int(ovf) <= 0
+    rij, nmask = dp_model.gather_rij(posj, nlist, boxj)
+    return float(jnp.sum(lj.atomic_energy({}, rij, nmask,
+                                          jnp.asarray(typ))))
+
+
+def test_lj_virial_matches_finite_difference_strain():
+    """trace(W) == -dE/d(eps) under isotropic affine strain (the virial
+    theorem's configurational term, to finite-difference accuracy)."""
+    lj, pos, typ, box = _lj_box(jitter=0.05)
+    posj = jnp.asarray(pos, jnp.float32)
+    typj = jnp.asarray(typ, jnp.int32)
+    boxj = jnp.asarray(box, jnp.float32)
+    spec = neighbors.NeighborSpec(rcut_nbr=lj.rcut + 1.0, sel=lj.sel)
+    nlist, ovf = neighbors.brute_force_neighbors(posj, typj, spec, boxj)
+    assert int(ovf) <= 0
+    _, _, stats = lj.energy_forces({}, posj, typj, nlist, box=boxj)
+    w = np.asarray(stats["virial"])
+    # symmetric by construction for a pair potential
+    np.testing.assert_allclose(w, w.T, atol=1e-4)
+
+    h = 1e-4
+    e_plus = _energy_under_strain(lj, pos, typ, box, +h)
+    e_minus = _energy_under_strain(lj, pos, typ, box, -h)
+    de_deps = (e_plus - e_minus) / (2 * h)
+    # isotropic strain: dE/deps = sum_ij rij . dE/drij = -trace(W)
+    tr_w = float(np.trace(w))
+    assert abs(tr_w + de_deps) < 2e-2 * max(abs(tr_w), 1.0), \
+        (tr_w, de_deps)
+
+
+def test_dp_virial_consistent_across_impls(tiny_cfg, tiny_params):
+    """The DP virial (autodiff rij contraction) must agree between the mlp
+    rung and its quintic tabulation — tabulation compresses the embedding
+    net, never the virial assembly."""
+    pos, typ, box = lattice.fcc_copper(2, 2, 2)
+    rng = np.random.default_rng(1)
+    pos = np.mod(pos + rng.normal(0, 0.05, pos.shape), box)
+    posj = jnp.asarray(pos, jnp.float32)
+    typj = jnp.asarray(typ, jnp.int32)
+    boxj = jnp.asarray(box, jnp.float32)
+    spec = neighbors.NeighborSpec(rcut_nbr=tiny_cfg.rcut + 0.5,
+                                  sel=tiny_cfg.sel)
+    nlist, ovf = neighbors.brute_force_neighbors(posj, typj, spec, boxj)
+    assert int(ovf) <= 0
+    _, _, w_mlp = dp_model.dp_energy_forces(tiny_params, tiny_cfg, posj,
+                                            nlist, typj, boxj)
+    p_tab = dp_model.tabulate_model(tiny_params, tiny_cfg, "quintic")
+    _, _, w_tab = dp_model.dp_energy_forces(p_tab, tiny_cfg, posj, nlist,
+                                            typj, boxj, impl="quintic")
+    w_mlp, w_tab = np.asarray(w_mlp), np.asarray(w_tab)
+    scale = max(1.0, float(np.max(np.abs(w_mlp))))
+    assert float(np.max(np.abs(w_mlp - w_tab))) / scale < 5e-3, \
+        (w_mlp, w_tab)
+
+
+def test_stress_observable_matches_virial_plus_kinetic():
+    """MDResult.stress (streamed per step from the scan) is exactly
+    (K + W) / V — spot-check the last step against a host recomputation."""
+    lj, pos, typ, box = _lj_box()
+    res = driver.run_md(None, {}, pos, typ, box, potential=lj,
+                        engine="scan", **_sim_kw(steps=10))
+    assert res.stress.shape == (10, 3, 3)
+    masses = jnp.full((len(pos),), 63.546)
+    kin = integrator.kinetic_tensor(jnp.asarray(res.final_vel), masses)
+    spec = neighbors.NeighborSpec(rcut_nbr=lj.rcut + 0.5, sel=lj.sel)
+    nlist, _ = neighbors.brute_force_neighbors(
+        jnp.asarray(res.final_pos), jnp.asarray(typ), spec,
+        jnp.asarray(res.final_box))
+    _, _, stats = lj.energy_forces({}, jnp.asarray(res.final_pos),
+                                   jnp.asarray(typ), nlist,
+                                   box=jnp.asarray(res.final_box))
+    ref = (np.asarray(kin) + np.asarray(stats["virial"])) \
+        / float(np.prod(res.final_box))
+    np.testing.assert_allclose(res.stress[-1], ref, atol=5e-5)
+    # thermo pressure column is the trace of the same tensor
+    assert res.thermo[-1]["press_gpa"] == pytest.approx(
+        np.trace(res.stress[-1]) / 3.0 * integrator.EV_A3_TO_GPA, rel=1e-5)
+
+
+# ------------------------------------------- zero coupling == fixed box
+
+@pytest.mark.parametrize("engine", ["python", "scan", "outer"])
+@pytest.mark.parametrize("barostat", [
+    api.BerendsenBarostat(compressibility_per_gpa=0.0),
+    api.StochasticCellRescaleBarostat(compressibility_per_gpa=0.0, seed=9),
+], ids=["berendsen0", "scr0"])
+def test_zero_coupling_barostat_bitexact_fixed_box(engine, barostat):
+    """compressibility == 0 makes the barostat apply a STATIC no-op: the
+    program is op-identical to the fixed-box path (only the box + a dead
+    RNG key ride in the carry), so NVE trajectories agree bit-for-bit on
+    every engine — the acceptance gate for carrying the box."""
+    lj, pos, typ, box = _lj_box()
+    kw = _sim_kw(engine=engine)
+    r_nve = driver.run_md(None, {}, pos, typ, box, potential=lj, **kw)
+    r_b0 = driver.run_md(None, {}, pos, typ, box, potential=lj,
+                         barostat=barostat, **kw)
+    np.testing.assert_array_equal(r_b0.final_pos, r_nve.final_pos)
+    np.testing.assert_array_equal(r_b0.final_vel, r_nve.final_vel)
+    np.testing.assert_array_equal(r_b0.final_box, r_nve.final_box)
+    assert r_b0.thermo == r_nve.thermo
+
+
+def test_zero_coupling_barostat_bitexact_under_langevin():
+    """Zero-coupling NPT over a LIVE thermostat: the barostat no-op must
+    not perturb the Langevin noise stream either (state layouts differ,
+    draws must not)."""
+    lj, pos, typ, box = _lj_box()
+    kw = _sim_kw(engine="outer")
+    ens = api.NVTLangevin(temp_k=100.0, friction=0.05, seed=3)
+    r_nvt = driver.run_md(None, {}, pos, typ, box, potential=lj,
+                          ensemble=ens, **kw)
+    r_b0 = driver.run_md(None, {}, pos, typ, box, potential=lj,
+                         ensemble=ens,
+                         barostat=api.BerendsenBarostat(
+                             compressibility_per_gpa=0.0), **kw)
+    np.testing.assert_array_equal(r_b0.final_pos, r_nvt.final_pos)
+    np.testing.assert_array_equal(r_b0.final_vel, r_nvt.final_vel)
+
+
+# --------------------------------------------------------- NPT physics
+
+def test_berendsen_barostat_relaxes_overpressured_box():
+    """A 2x-overpressured LJ box must relax MONOTONICALLY toward the
+    target pressure under Berendsen coupling, growing the volume."""
+    lj, pos, typ, box = _lj_box()
+    # compress 3% per edge: instantaneous pressure jumps well above the
+    # equilibrium value; target the midpoint pressure so the start is
+    # ~2x-overpressured relative to the remaining gap
+    pos_c = np.asarray(pos, float) * 0.97
+    box_c = np.asarray(box, float) * 0.97
+    probe = driver.run_md(None, {}, pos_c, typ, box_c, potential=lj,
+                          engine="scan", **_sim_kw(steps=1, temp_k=50.0))
+    p0 = probe.thermo[-1]["press_gpa"]
+    target = p0 / 2.0            # start is 2x over the target gap
+    res = driver.run_md(
+        None, {}, pos_c, typ, box_c, potential=lj, engine="scan",
+        ensemble=api.BerendsenThermostat(temp_k=50.0, tau_fs=25.0),
+        barostat=api.BerendsenBarostat(pressure_gpa=target, tau_fs=250.0,
+                                       compressibility_per_gpa=0.01),
+        **_sim_kw(steps=300, temp_k=50.0, thermo_every=50))
+    # per-step pressure from the streamed stress, averaged over windows so
+    # the monotonicity check sees the relaxation, not the ~0.05 GPa
+    # thermal fluctuation of a 108-atom box; once a window enters the
+    # noise band around the target, monotonicity is no longer meaningful
+    press_t = np.trace(res.stress, axis1=1, axis2=2) / 3.0 \
+        * integrator.EV_A3_TO_GPA
+    win = press_t.reshape(6, -1).mean(axis=1)
+    gaps = np.abs(win - target)
+    noise = 0.1
+    for i in range(len(gaps) - 1):
+        if gaps[i] > noise:
+            assert gaps[i + 1] < gaps[i], (win, target)
+    assert gaps[-1] < max(noise, 0.2 * gaps[0]), (win, target)
+    # overpressure relaxes by EXPANSION
+    vols = np.asarray([row["vol"] for row in res.thermo])
+    assert vols[-1] > vols[0], vols
+    assert res.final_box[0] > box_c[0]
+
+
+def test_scr_barostat_tracks_target_and_draws_noise():
+    """The stochastic cell rescale must also relax toward the target AND
+    actually consume its RNG stream (volume path differs from Berendsen's
+    deterministic one)."""
+    lj, pos, typ, box = _lj_box()
+    pos_c = np.asarray(pos, float) * 0.97
+    box_c = np.asarray(box, float) * 0.97
+    kw = _sim_kw(steps=300, temp_k=50.0, thermo_every=50, engine="scan")
+    mk = dict(pressure_gpa=-5.0, tau_fs=50.0, compressibility_per_gpa=0.01)
+    r_scr = driver.run_md(
+        None, {}, pos_c, typ, box_c, potential=lj,
+        ensemble=api.BerendsenThermostat(temp_k=50.0, tau_fs=25.0),
+        barostat=api.StochasticCellRescaleBarostat(temp_k=50.0, seed=11,
+                                                   **mk), **kw)
+    r_ber = driver.run_md(
+        None, {}, pos_c, typ, box_c, potential=lj,
+        ensemble=api.BerendsenThermostat(temp_k=50.0, tau_fs=25.0),
+        barostat=api.BerendsenBarostat(**mk), **kw)
+    gap0 = abs(r_scr.press_gpa_trace()[0] + 5.0)
+    gap1 = abs(r_scr.press_gpa_trace()[-1] + 5.0)
+    assert gap1 < 0.5 * gap0, r_scr.press_gpa_trace()
+    # the noise is live: SCR and Berendsen volumes diverge
+    assert abs(float(np.prod(r_scr.final_box))
+               - float(np.prod(r_ber.final_box))) > 1e-3
+
+
+@pytest.mark.parametrize("engine", ["python", "scan", "outer"])
+def test_npt_99_step_protocol_all_engines(engine):
+    """Acceptance: the paper's 99-step copper(LJ) protocol runs as NPT on
+    every engine with the box evolving in the scan carry."""
+    _, pos, typ, box = _lj_box()
+    # the paper's 2 A skin needs ~77 neighbor slots at rcut 4: give the
+    # python engine (no escalation path) the full capacity up front
+    lj = api.LJPotential(sel=(128,), rcut_lj=4.0)
+    res = driver.run_md(
+        None, {}, pos, typ, box, potential=lj, engine=engine,
+        ensemble=api.BerendsenThermostat(temp_k=330.0, tau_fs=100.0),
+        barostat=api.BerendsenBarostat(pressure_gpa=0.0, tau_fs=100.0,
+                                       compressibility_per_gpa=0.01),
+        steps=99, dt_fs=1.0, temp_k=330.0, skin=2.0, rebuild_every=50,
+        thermo_every=50)
+    assert res.steps == 99
+    assert [t["step"] for t in res.thermo] == [50, 99]
+    # the box moved (pressure here is far from 0 at the LJ lattice)
+    assert not np.allclose(res.final_box, np.asarray(box, np.float32))
+    assert np.all(np.isfinite(res.final_pos))
+    assert np.isfinite(res.thermo[-1]["press_gpa"])
+    assert res.stress.shape == (99, 3, 3)
+
+
+def test_spec_resolves_npt_names():
+    """SimulationSpec(ensemble="npt_berendsen", pressure_gpa=...) is the
+    one-line NPT quickstart: the name expands to thermostat + barostat."""
+    lj, pos, typ, box = _lj_box(nx=2)
+    spec = api.SimulationSpec(potential=lj, ensemble="npt_berendsen",
+                              pressure_gpa=1.5, temp_k=200.0,
+                              **{k: v for k, v in _sim_kw(steps=5).items()
+                                 if k not in ("temp_k",)})
+    assert isinstance(spec.ensemble, api.BerendsenThermostat)
+    assert isinstance(spec.barostat, api.BerendsenBarostat)
+    assert spec.barostat.pressure_gpa == 1.5
+    assert spec.ensemble.temp_k == 200.0
+    res = api.Simulation(spec).run({}, pos, typ, box)
+    assert np.isfinite(res.thermo[-1]["press_gpa"])
+    # pressure_gpa alone attaches a Berendsen barostat to any ensemble
+    spec2 = api.SimulationSpec(potential=lj, pressure_gpa=0.5)
+    assert isinstance(spec2.barostat, api.BerendsenBarostat)
+    # NVT names resolve too, without a barostat
+    ens, baro = api.resolve_ensemble("nvt_langevin", friction=0.2)
+    assert isinstance(ens, api.NVTLangevin) and baro is None
+    ens, baro = api.resolve_ensemble("npt_scr", pressure_gpa=2.0)
+    assert isinstance(ens, api.NVTLangevin)
+    assert isinstance(baro, api.StochasticCellRescaleBarostat)
+    assert api.make_barostat("none") is None
+    with pytest.raises(ValueError):
+        api.make_barostat("mtk_full")
+    with pytest.raises(ValueError):
+        api.make_ensemble("npt_berendsen")   # barostat-carrying name
+
+
+# ------------------------------------------- dynamic-box neighbor search
+
+def test_dynamic_cell_list_matches_static_and_flags_shrunk_box():
+    """The dynamic-box cell search must reproduce the static one at the
+    reference box, track a mildly rescaled box, and flag GRID_INVALID
+    (never silently truncate) when the box shrinks past the stencil."""
+    rng = np.random.default_rng(2)
+    box = np.asarray([16.0, 16.0, 16.0])
+    pos = jnp.asarray(rng.uniform(0, box, (128, 3)), jnp.float32)
+    typ = jnp.zeros((128,), jnp.int32)
+    spec = neighbors.NeighborSpec(rcut_nbr=4.0, sel=(48,))
+    static_fn = neighbors.make_cell_list_fn(spec, box)
+    dyn_fn = neighbors.make_cell_list_fn(spec, box, dynamic_box=True)
+    nl_s, ovf_s = static_fn(pos, typ)
+    nl_d, ovf_d = dyn_fn(pos, typ, jnp.asarray(box, jnp.float32))
+    np.testing.assert_array_equal(np.asarray(nl_s), np.asarray(nl_d))
+    assert int(ovf_d) == int(ovf_s) <= 0
+
+    # a 1% box change keeps the grid valid: pair SETS match brute force
+    box2 = box * 1.01
+    pos2 = pos * 1.01
+    nl_d2, ovf_d2 = dyn_fn(pos2, typ, jnp.asarray(box2, jnp.float32))
+    assert int(ovf_d2) <= 0
+    nl_ref, _ = neighbors.brute_force_neighbors(
+        pos2, typ, spec, jnp.asarray(box2, jnp.float32))
+    for i in range(0, 128, 17):
+        a = {int(x) for x in np.asarray(nl_d2[i]) if x >= 0}
+        b = {int(x) for x in np.asarray(nl_ref[i]) if x >= 0}
+        assert a == b, (i, a ^ b)
+
+    # shrunk far enough that a cell stops covering rcut: flag, don't lie
+    box3 = box * 0.7          # cell size 4.0 -> 2.8 < rcut_nbr
+    nl_d3, ovf_d3 = dyn_fn(pos * 0.7, typ, jnp.asarray(box3, jnp.float32))
+    assert int(ovf_d3) >= int(neighbors.GRID_INVALID)
+
+
+@pytest.mark.parametrize("engine", ["scan", "outer"])
+def test_driver_rebuilds_grid_when_box_crosses_cell_count(engine):
+    """A strong barostat squeeze that changes floor(box/rcut) must be
+    absorbed by the grid re-derivation (grid_rebuilds > 0), with the
+    physics still finite — never a silent truncation. scan re-derives on
+    the host at each rebuild; outer hits GRID_INVALID mid-chunk and must
+    REPLAY from snapshot with counts from the post-chunk box (a grid the
+    chunk's larger early boxes also satisfy)."""
+    lj, pos, typ, box = _lj_box(nx=4)       # 14.5 A box: 3 cells @ 4.5
+    res = driver.run_md(
+        None, {}, pos, typ, box, potential=lj, engine=engine,
+        ensemble=api.BerendsenThermostat(temp_k=50.0, tau_fs=50.0),
+        barostat=api.BerendsenBarostat(pressure_gpa=120.0, tau_fs=30.0,
+                                       compressibility_per_gpa=0.01),
+        **_sim_kw(steps=120, temp_k=50.0, rebuild_every=5))
+    # a +120 GPa target squeezes the box hard: the 3-cell grid must be
+    # re-derived as the box shrinks through the 3 * rcut_nbr boundary
+    assert res.final_box[0] < np.asarray(box)[0]
+    assert res.grid_rebuilds > 0, (res.final_box, res.grid_rebuilds)
+    assert np.all(np.isfinite(res.final_pos))
+
+
+def test_box_lengths_rejects_garbage():
+    """(3,) vectors and diagonal (3, 3) matrices are accepted; anything
+    else raises instead of silently truncating to a zero-volume box."""
+    from repro.md import stepper
+    np.testing.assert_allclose(stepper.box_lengths([4.0, 5.0, 6.0]),
+                               [4.0, 5.0, 6.0])
+    np.testing.assert_allclose(
+        stepper.box_lengths(np.diag([4.0, 5.0, 6.0])), [4.0, 5.0, 6.0])
+    with pytest.raises(ValueError):
+        stepper.box_lengths(np.full((3, 3), 2.0))       # triclinic
+    with pytest.raises(ValueError):
+        stepper.box_lengths([4.0, 5.0])

@@ -178,11 +178,13 @@ def test_scan_engine_conserves_energy(tiny_cfg, tiny_params):
 
 
 def test_thermo_cadence_matches_seed_protocol(tiny_cfg, tiny_params):
-    """Rows at every thermo_every steps plus the final step, seed schema."""
+    """Rows at every thermo_every steps plus the final step; the seed
+    schema grew pressure/volume columns with the virial subsystem."""
     res = _run(tiny_cfg, tiny_params, "scan", steps=75, thermo_every=30)
     assert [t["step"] for t in res.thermo] == [30, 60, 75]
     for row in res.thermo:
-        assert set(row) == {"step", "pe", "ke", "etot", "temp"}
+        assert set(row) == {"step", "pe", "ke", "etot", "temp",
+                            "press_gpa", "vol"}
 
 
 def test_overflow_escalation_retry(tiny_cfg, tiny_params):
