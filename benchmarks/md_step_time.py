@@ -102,33 +102,47 @@ def bench_single_process(args, steps: int, reps: int):
 
 
 def bench_distributed_worker(args, steps: int, reps: int) -> int:
-    """Runs INSIDE the forced-device subprocess: time the slab driver's
-    whole-trajectory outer program (migration + rebuild in the scan)."""
+    """Runs INSIDE the forced-device subprocess: time the brick driver's
+    whole-trajectory outer program (migration + rebuild in the scan) on
+    the requested ``--dist-topology`` shape (``--dist-slabs k`` = (k,))."""
     import time
 
     import jax.numpy as jnp
     import numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    from repro.md import domain, integrator, stepper
+    from repro.md import api, domain, integrator, stepper
+    from repro.md.topology import Topology
 
-    n_slabs = args.dist_slabs
+    topo = Topology.parse(args.dist_topology or args.dist_slabs)
+    n_slabs = topo.n_ranks
     # always the full config: the tiny sel=(32,) cannot hold the 4.5 A
-    # copper neighborhood (~42 neighbors) and DomainSpec has no escalation
-    # path — overflow is a hard error by design
+    # copper neighborhood (~42 neighbors) and DomainSpec escalation is a
+    # host replay — keep the timed loop overflow-free by construction
     cfg = copper_cfg(False)
-    params = dp_model.init_dp_params(jax.random.PRNGKey(0), cfg)
-    # >= 3 cells along x per slab and y/z >= 2*rcut_halo for min-image
-    pos, typ, box = lattice.fcc_copper(3 * n_slabs, 3, 3)
+    ensemble, barostat = api.resolve_ensemble(args.ensemble)
+    if args.potential == "lj":
+        potential = api.LJPotential(sel=cfg.sel, rcut_lj=cfg.rcut)
+        params = {}
+    else:
+        potential = None
+        params = dp_model.init_dp_params(jax.random.PRNGKey(0), cfg)
+    # WEAK SCALING: constant atoms per brick — the lattice grows with the
+    # topology shape (3 FCC cells per brick per decomposed axis; >= 3
+    # cells along every axis so min-image stays valid on undecomposed
+    # dims and bricks cover rcut_halo on decomposed ones)
+    dims = [3 * topo.shape[a] if a < topo.ndim else 3 for a in range(3)]
+    pos, typ, box = lattice.fcc_copper(*dims)
     n = len(pos)
     mesh = jax.make_mesh((n_slabs, 1), ("data", "model"))
     cap = int(n / n_slabs * 1.5) + 8
     # skin 0.5: sel=(48,) holds the 4.5 A copper neighborhood with margin;
-    # a 1.0 skin overflows it at 330 K (DomainSpec has no escalation path —
-    # overflow is a hard error by design)
+    # a 1.0 skin overflows it at 330 K. Later halo sweeps pack earlier
+    # sweeps' ghosts too, so the send capacity grows with the topology rank
     spec = domain.DomainSpec(box=tuple(box), n_slabs=n_slabs,
-                             atom_capacity=cap, halo_capacity=cap,
-                             rcut_halo=cfg.rcut + 0.5)
+                             atom_capacity=cap,
+                             halo_capacity=cap * (2 ** (topo.ndim - 1)),
+                             rcut_halo=cfg.rcut + 0.5, topology=topo.shape)
     spec.validate()
     masses = jnp.full((n,), 63.546)
     vel = integrator.init_velocities(jax.random.PRNGKey(1), masses, 330.0)
@@ -141,17 +155,20 @@ def bench_distributed_worker(args, steps: int, reps: int) -> int:
         lambda x: jax.device_put(x, NamedSharding(mesh, P())), params)
     program = domain.make_outer_md_program(
         cfg, spec, mesh, (63.546,), 1.0, decomp="atoms", neighbor="cells",
-        donate=False)
+        donate=False, potential=potential, ensemble=ensemble,
+        barostat=barostat)
+    ens0 = program.init_ensemble_state()
     sched = stepper.chunk_schedule(steps, args.rebuild_every, 8)
 
     def one_run():
         state = state0
+        ens = ens0
+        baro = program.init_barostat_state()
         box_d = None
         t0 = time.time()
         for n_segs, seg_len in sched:
-            state, _, box_d, _, thermo = program.run(state, params_r,
-                                                     n_segs, seg_len,
-                                                     box=box_d)
+            state, ens, box_d, baro, thermo = program.run(
+                state, params_r, n_segs, seg_len, ens, box_d, baro)
             domain.check_segment_thermo(thermo)
         jax.block_until_ready(state)
         return (time.time() - t0) * 1e6 / (steps * n)
@@ -159,9 +176,10 @@ def bench_distributed_worker(args, steps: int, reps: int) -> int:
     one_run()                                                        # warm
     times = [one_run() for _ in range(reps)]
     print(json.dumps({
-        "slabs": n_slabs, "n_atoms": n, "devices": len(jax.devices()),
+        "slabs": n_slabs, "topology": topo.label(), "n_atoms": n,
+        "atoms_per_rank": n // n_slabs, "devices": len(jax.devices()),
         "engine": "outer_distributed",
-        "potential": "dp", "ensemble": "nve",   # worker is always DP+NVE
+        "potential": args.potential, "ensemble": args.ensemble,
         "us_per_step_atom_median": statistics.median(times),
         "us_per_step_atom_min": min(times),
         "us_per_step_atom_all": times,
@@ -169,14 +187,19 @@ def bench_distributed_worker(args, steps: int, reps: int) -> int:
     return 0
 
 
-def bench_distributed(args, steps: int, reps: int):
+def bench_distributed(args, steps: int, reps: int, topology=None,
+                      potential=None, ensemble=None):
     """Spawn the forced-device worker subprocess and parse its JSON line."""
+    from repro.md.topology import Topology
+    topo = Topology.parse(topology or args.dist_topology or args.dist_slabs)
     env = dict(os.environ)
     env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
                         f" --xla_force_host_platform_device_count="
-                        f"{args.dist_slabs}").strip()
+                        f"{topo.n_ranks}").strip()
     cmd = [sys.executable, os.path.abspath(__file__), "--dist-worker",
-           "--dist-slabs", str(args.dist_slabs),
+           "--dist-topology", topo.label(),
+           "--potential", potential or args.potential,
+           "--ensemble", ensemble or args.ensemble,
            "--rebuild-every", str(args.rebuild_every),
            "--steps", str(steps), "--reps", str(reps)]
     # (no --tiny forwarding: the worker always runs the full config — the
@@ -187,11 +210,27 @@ def bench_distributed(args, steps: int, reps: int):
         print(f"  distributed bench FAILED:\n{r.stdout}\n{r.stderr}")
         return {"status": "failed", "error": r.stderr[-500:]}
     row = json.loads(r.stdout.strip().splitlines()[-1])
-    print(f"  engine=outer_distributed ({row['slabs']} slabs, "
-          f"{row['n_atoms']} atoms) median "
+    print(f"  engine=outer_distributed (topology {row['topology']}, "
+          f"{row['n_atoms']} atoms, {row['atoms_per_rank']}/rank) median "
           f"{row['us_per_step_atom_median']:8.2f} us/step/atom "
           f"(min {row['us_per_step_atom_min']:.2f})")
     return row
+
+
+WEAK_SCALING_TOPOLOGIES = ("2", "2x2", "2x2x2")
+
+
+def bench_weak_scaling(args, steps: int, reps: int):
+    """LJ weak-scaling sweep: constant atoms/rank, growing brick topology
+    (2 -> 2x2 -> 2x2x2) + one NPT row — per-rank cost should stay ~flat
+    as axes are added (the point of the N-D decomposition)."""
+    rows = []
+    for t in WEAK_SCALING_TOPOLOGIES:
+        rows.append(bench_distributed(args, steps, reps, topology=t,
+                                      potential="lj", ensemble="nve"))
+    rows.append(bench_distributed(args, steps, reps, topology="2x2",
+                                  potential="lj", ensemble="npt_berendsen"))
+    return rows
 
 
 def git_sha() -> str:
@@ -241,23 +280,47 @@ def append_trajectory(path: str, payload: dict) -> None:
         "speedup_scan_over_python": payload["speedup_scan_over_python"],
         "speedup_outer_over_scan": payload["speedup_outer_over_scan"],
     }
-    # the distributed worker always runs DP mlp + NVE (see
-    # bench_distributed_worker); never record its timing under another
-    # potential/ensemble key
-    if payload.get("distributed", {}).get("us_per_step_atom_min") and \
-            (entry["potential"], entry["ensemble"]) == ("dp", "nve") and \
-            entry["impl"] == "mlp":
+    # the distributed worker honors --potential/--ensemble, but its timing
+    # only belongs on this entry when they match the single-process legs
+    # (a DP entry must not carry an LJ worker's number)
+    dist = payload.get("distributed", {})
+    if dist.get("us_per_step_atom_min") and \
+            (entry["potential"], entry["ensemble"]) == \
+            (dist.get("potential", "dp"), dist.get("ensemble", "nve")):
         entry["us_per_step_atom_min"]["outer_distributed"] = \
-            payload["distributed"]["us_per_step_atom_min"]
+            dist["us_per_step_atom_min"]
+        entry["distributed_topology"] = dist.get("topology")
+
     def _key(e):
         # the full protocol shape: entries measured under different
-        # steps/rebuild cadence are NOT comparable and must coexist
-        return (e.get("git_sha"), e.get("system"), e.get("steps"),
-                e.get("rebuild_every"), e.get("tiny"), e.get("impl"),
-                e.get("potential", "dp"), e.get("ensemble", "nve"))
+        # steps/rebuild cadence (or topology) are NOT comparable and must
+        # coexist
+        return (e.get("git_sha"), e.get("benchmark", "md_step_time"),
+                e.get("system"), e.get("steps"), e.get("rebuild_every"),
+                e.get("tiny"), e.get("impl"), e.get("potential", "dp"),
+                e.get("ensemble", "nve"), e.get("topology"))
 
-    traj = [e for e in old.get("trajectory", []) if _key(e) != _key(entry)]
-    traj.append(entry)
+    new_entries = [entry]
+    for row in payload.get("weak_scaling", []):
+        if row.get("status") == "failed" or \
+                not row.get("us_per_step_atom_min"):
+            continue
+        # weak-scaling rows are keyed by TOPOLOGY shape: the trajectory
+        # tracks per-rank cost as decomposition axes are added, PR-over-PR
+        new_entries.append({
+            "git_sha": entry["git_sha"], "utc": entry["utc"],
+            "benchmark": "md_weak_scaling",
+            "topology": row["topology"],
+            "potential": row["potential"], "ensemble": row["ensemble"],
+            "n_atoms": row["n_atoms"],
+            "atoms_per_rank": row["atoms_per_rank"],
+            "steps": payload["steps"],
+            "rebuild_every": payload["rebuild_every"],
+            "us_per_step_atom_min": row["us_per_step_atom_min"],
+        })
+    keys = {_key(e) for e in new_entries}
+    traj = [e for e in old.get("trajectory", []) if _key(e) not in keys]
+    traj.extend(new_entries)
     payload["trajectory"] = traj
 
 
@@ -286,8 +349,18 @@ def main(argv=None) -> int:
     ap.add_argument("--min-outer-speedup", type=float, default=None,
                     help="exit nonzero if outer/scan speedup falls below")
     ap.add_argument("--dist-slabs", type=int, default=0,
-                    help="also benchmark the distributed slab driver on "
-                         "this many forced host devices (0: skip)")
+                    help="also benchmark the distributed brick driver on "
+                         "this many forced host devices (0: skip); legacy "
+                         "1-D spelling of --dist-topology k")
+    ap.add_argument("--dist-topology", default=None,
+                    help="benchmark the distributed driver on this brick "
+                         "topology (e.g. 2x2x2); forces prod(shape) host "
+                         "devices in a subprocess")
+    ap.add_argument("--weak-scaling", action="store_true",
+                    help="LJ weak-scaling sweep: constant atoms/rank over "
+                         "topologies 2 -> 2x2 -> 2x2x2 (+ one NPT row), "
+                         "appended to the BENCH trajectory keyed by "
+                         "topology shape")
     ap.add_argument("--dist-worker", action="store_true",
                     help=argparse.SUPPRESS)
     ap.add_argument("--out", default="BENCH_md.json")
@@ -328,8 +401,10 @@ def main(argv=None) -> int:
         "speedup_scan_over_python": speedup,
         "speedup_outer_over_scan": outer_speedup,
     }
-    if args.dist_slabs:
+    if args.dist_slabs or args.dist_topology:
         payload["distributed"] = bench_distributed(args, steps, reps)
+    if args.weak_scaling:
+        payload["weak_scaling"] = bench_weak_scaling(args, steps, reps)
     append_trajectory(args.out, payload)
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=1)
@@ -340,6 +415,10 @@ def main(argv=None) -> int:
     if payload.get("distributed", {}).get("status") == "failed":
         # a broken distributed leg must fail the job, not just the artifact
         print("FAIL: distributed benchmark worker failed")
+        rc = 1
+    if any(r.get("status") == "failed"
+           for r in payload.get("weak_scaling", [])):
+        print("FAIL: weak-scaling benchmark worker failed")
         rc = 1
     if args.min_speedup is not None and speedup < args.min_speedup:
         print(f"FAIL: scan speedup {speedup:.2f}x < required "

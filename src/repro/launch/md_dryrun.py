@@ -43,6 +43,7 @@ from repro.core import dp_model
 from repro.core.types import COPPER_DP, WATER_DP, DPConfig
 from repro.launch import mesh as mesh_mod
 from repro.md import api, domain, stepper
+from repro.md.topology import Topology
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,21 +65,43 @@ H2O = MDCell("h2o", WATER_DP, 162_000, 0.5, (15.999, 1.008),
 IMPLS = ("mlp", "quintic", "cheb", "cheb_pallas")
 
 
-def geometry(cell: MDCell, n_slabs: int, n_model: int
+def geometry(cell: MDCell, n_slabs: int, n_model: int,
+             topology: Optional[Tuple[int, ...]] = None
              ) -> Tuple[domain.DomainSpec, int]:
-    """Slab box sized so each chip owns ``atoms_per_chip`` centers."""
+    """Brick box sized so each chip owns ``atoms_per_chip`` centers.
+
+    ``topology`` picks the N-D brick shape over the spatial ranks (default:
+    the 1-D ``(n_slabs,)`` slab column). Decomposed axes get a brick edge
+    of at least ``2.2 * rc_halo``; the remaining volume spreads over the
+    undecomposed axes (or inflates the brick for a full 3-D topology).
+    """
+    topo = Topology.parse(topology if topology is not None else (n_slabs,))
+    assert topo.n_ranks == n_slabs, (topo.shape, n_slabs)
     cap = cell.atoms_per_chip * n_model
     cap = -(-cap // n_model) * n_model
-    slab_volume = cap / cell.density
+    brick_volume = cap / cell.density
     rc_halo = cell.cfg.rcut + 2.0
-    w = max(2.2 * rc_halo, 25.0)
-    yz = float(np.sqrt(slab_volume / w))
-    halo_frac = rc_halo / w
-    halo_cap = int(cap * halo_frac * 1.4) + 1024
+    w_min = max(2.2 * rc_halo, 25.0)
+    ndim = topo.ndim
+    if ndim == 3:
+        w = max(brick_volume ** (1.0 / 3.0), w_min)
+        edges = (w, w, w)
+    elif ndim == 2:
+        rest = brick_volume / (w_min * w_min)
+        edges = (w_min, w_min, max(rest, 1.0))
+    else:
+        yz = float(np.sqrt(brick_volume / w_min))
+        edges = (w_min, yz, yz)
+    box = tuple(edges[a] * (topo.shape[a] if a < ndim else 1)
+                for a in range(3))
+    # per-axis halo fraction; later sweeps pack earlier sweeps' ghosts too,
+    # so the send capacity grows with the decomposed rank
+    halo_frac = max(rc_halo / edges[a] for a in range(ndim))
+    halo_cap = int(cap * halo_frac * 1.4 * 1.6 ** (ndim - 1)) + 1024
     spec = domain.DomainSpec(
-        box=(w * n_slabs, yz, yz), n_slabs=n_slabs,
+        box=box, n_slabs=n_slabs,
         atom_capacity=int(cap * 1.08) // n_model * n_model,
-        halo_capacity=halo_cap, rcut_halo=rc_halo)
+        halo_capacity=halo_cap, rcut_halo=rc_halo, topology=topo.shape)
     return spec, cap
 
 
@@ -107,7 +130,8 @@ def lower_md_cell(cell: MDCell, impl: str, mesh, multi_pod: bool,
                   verbose: bool = True, segment_len: int = 4,
                   outer_segments: int = 0, potential_name: str = "dp",
                   ensemble: Optional[Any] = None,
-                  barostat: Optional[Any] = None) -> Dict[str, Any]:
+                  barostat: Optional[Any] = None,
+                  topology: Optional[str] = None) -> Dict[str, Any]:
     spatial_axis = ("pod", "data") if multi_pod else "data"
     n_slabs = mesh.shape["data"] * (mesh.shape.get("pod", 1))
     n_model = mesh.shape["model"]
@@ -116,6 +140,8 @@ def lower_md_cell(cell: MDCell, impl: str, mesh, multi_pod: bool,
     name = f"dpmd_{cell.name}/{impl}/{mesh_name}"
     if potential_name != "dp":
         name = f"{potential_name}_{cell.name}/{mesh_name}"
+    if topology:
+        name += f"/topo{Topology.parse(topology).label()}"
     if type(ensemble) is not api.NVE:
         name += f"/{type(ensemble).__name__}"
     if barostat is not None:
@@ -123,7 +149,7 @@ def lower_md_cell(cell: MDCell, impl: str, mesh, multi_pod: bool,
     if outer_segments:
         name += f"/outer{outer_segments}"
     try:
-        spec, cap = geometry(cell, n_slabs, n_model)
+        spec, cap = geometry(cell, n_slabs, n_model, topology=topology)
         cfg = dataclasses.replace(cell.cfg, impl=impl)
         potential = None                 # make_local_md_step wraps cfg/impl
         if potential_name == "lj":
@@ -286,6 +312,11 @@ def main(argv=None) -> int:
                          "program (Langevin adds per-step RNG ops + a key "
                          "in the scan carry; npt_* adds a barostat and the "
                          "dynamic box)")
+    ap.add_argument("--topology", default=None,
+                    help="N-D brick shape over the spatial ranks, e.g. 4x4 "
+                         "on the 16x16 pod (default: the 1-D slab column) — "
+                         "the compile proof that the fused outer program "
+                         "lowers on multi-axis topologies")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
     ensemble, barostat = api.resolve_ensemble(args.ensemble)
@@ -310,7 +341,8 @@ def main(argv=None) -> int:
                                     segment_len=args.segment_len,
                                     outer_segments=args.outer_segments,
                                     potential_name=args.potential,
-                                    ensemble=ensemble, barostat=barostat)
+                                    ensemble=ensemble, barostat=barostat,
+                                    topology=args.topology)
                 rows.append(row)
                 fails += row["status"] == "failed"
     if args.out:

@@ -2,9 +2,15 @@
 
   PYTHONPATH=src python -m repro.launch.md_run --slabs 4 --model-axis 2 \
       --nx 8 --steps 99
+  PYTHONPATH=src python -m repro.launch.md_run --topology 2x2x2 \
+      --nx 6 --nyz 6 --steps 99
 
-Uses the shard_map'd slab-decomposition step (halo exchange + reverse force
-comm + model-axis decomposition). Two engines:
+Uses the shard_map'd brick-decomposition step (staged per-axis halo sweeps
++ reverse force comm + model-axis decomposition). ``--topology`` picks the
+N-D brick shape over the spatial mesh axis (``2x2x2`` = 8 bricks, one per
+device at ``--model-axis 1``); ``--slabs k`` is the legacy 1-D spelling
+``(k,)``. Per decomposed axis the box must satisfy
+``box[a]/shape[a] >= rcut_halo``. Two engines:
 
   --engine outer  (default) the whole-trajectory program: migration +
                   rebuild folded INTO one two-level lax.scan; one dispatch
@@ -32,6 +38,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.types import DPConfig
 from repro.md import api, domain, integrator, lattice, stepper
+from repro.md.topology import Topology
 
 
 def main(argv=None):
@@ -39,7 +46,12 @@ def main(argv=None):
     ap.add_argument("--nx", type=int, default=8, help="FCC cells along x")
     ap.add_argument("--nyz", type=int, default=3, help="FCC cells along y/z (>=3: min-image needs box >= 2*rcut_halo)")
     ap.add_argument("--slabs", type=int, default=None,
-                    help="spatial slabs (default: n_devices / model_axis)")
+                    help="spatial slabs (default: n_devices / model_axis); "
+                         "legacy 1-D spelling of --topology k")
+    ap.add_argument("--topology", default=None,
+                    help="N-D brick shape over the spatial axis, e.g. "
+                         "2x2x2 or 2x4 (overrides --slabs); per axis "
+                         "box[a]/shape[a] >= rcut_halo must hold")
     ap.add_argument("--model-axis", type=int, default=1)
     ap.add_argument("--steps", type=int, default=99)
     ap.add_argument("--dt", type=float, default=1.0)
@@ -70,7 +82,14 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     n_dev = len(jax.devices())
-    n_slabs = args.slabs or max(n_dev // args.model_axis, 1)
+    if args.topology:
+        topo = Topology.parse(args.topology)
+    elif args.slabs:
+        topo = Topology((args.slabs,)) if args.slabs >= 2 else None
+    else:
+        k = max(n_dev // args.model_axis, 1)
+        topo = Topology((k,)) if k >= 2 else None
+    n_slabs = topo.n_ranks if topo is not None else 1
 
     cfg = DPConfig(ntypes=1, rcut=4.0, rcut_smth=2.0, sel=(96,),
                    type_map=("Cu",), embed_widths=(8, 16, 32), axis_neuron=4,
@@ -116,9 +135,14 @@ def main(argv=None):
     pos = np.mod(pos + rng.normal(0, 0.02, pos.shape), box)
     n = len(pos)
     cap = int(n / n_slabs * 1.5) + 8
+    # later sweeps pack owned atoms PLUS earlier sweeps' ghosts, so the
+    # per-side send capacity grows with the decomposed rank
+    halo_cap = cap * (2 ** (topo.ndim - 1))
     spec = domain.DomainSpec(box=tuple(box), n_slabs=n_slabs,
                              atom_capacity=cap - cap % args.model_axis,
-                             halo_capacity=cap, rcut_halo=cfg.rcut + 0.5)
+                             halo_capacity=halo_cap,
+                             rcut_halo=cfg.rcut + 0.5,
+                             topology=topo.shape)
     spec.validate()
 
     masses = jnp.full((n,), 63.546)
@@ -131,9 +155,10 @@ def main(argv=None):
     params_r = jax.tree.map(
         lambda x: jax.device_put(x, NamedSharding(mesh, P())), params)
 
-    print(f"{n} atoms, {n_slabs} slabs x {args.model_axis} model shards "
-          f"on {n_dev} devices, engine={args.engine}, "
-          f"potential={args.potential}, ensemble={args.ensemble}"
+    print(f"{n} atoms, topology {topo.label()} ({n_slabs} bricks) x "
+          f"{args.model_axis} model shards on {n_dev} devices, "
+          f"engine={args.engine}, potential={args.potential}, "
+          f"ensemble={args.ensemble}"
           + (f", P0={args.pressure or 0.0} GPa"
              if barostat is not None else ""))
 
@@ -154,10 +179,16 @@ def main(argv=None):
 
     boxd = None     # dynamic box: carried across dispatches (None: launch)
     if args.engine == "outer":
-        program = domain.make_outer_md_program(
-            cfg, spec, mesh, (63.546,), args.dt, impl=args.impl,
-            decomp="atoms", neighbor="cells", potential=potential,
-            ensemble=ensemble, barostat=barostat)
+        policy = stepper.EscalationPolicy()
+
+        def build_program(spec_run):
+            return domain.make_outer_md_program(
+                cfg, spec_run, mesh, (63.546,), args.dt, impl=args.impl,
+                decomp="atoms", neighbor="cells", potential=potential,
+                ensemble=ensemble, barostat=barostat)
+
+        spec_run = spec
+        program = build_program(spec_run)
         ens = program.init_ensemble_state()
         baro = program.init_barostat_state()
         t0 = time.time()
@@ -167,10 +198,39 @@ def main(argv=None):
             # ONE dispatch per chunk of segments; migration + rebuild run
             # inside the scanned program. One host fetch checks the chunk's
             # stacked overflow flags and prints its thermo; the dynamic box
-            # and barostat state come back in the same carry.
-            state, ens, boxd, baro, thermo = program.run(
-                state, params_r, n_segs, seg_len, ens, boxd, baro)
-            domain.check_segment_thermo(thermo)
+            # and barostat state come back in the same carry. A capacity
+            # overflow (a barostat-squeezed box raises per-brick density)
+            # REPLAYS the chunk from its entry snapshot with DomainSpec
+            # capacities escalated by the carried-box volume ratio and the
+            # atoms re-partitioned into the new layout.
+            for attempt in range(policy.max_attempts + 1):
+                snap = (jax.device_get((state, ens, boxd, baro))
+                        if program._donate else (state, ens, boxd, baro))
+                try:
+                    state, ens, boxd, baro, thermo = program.run(
+                        state, params_r, n_segs, seg_len, ens, boxd, baro)
+                    domain.check_segment_thermo(thermo)
+                    break
+                except RuntimeError as e:
+                    if "geom_overflow" in str(e) \
+                            or attempt == policy.max_attempts:
+                        raise
+                    state, ens, boxd, baro = snap
+                    box_now = np.asarray(
+                        boxd if boxd is not None else spec.box, float)
+                    spec_run = domain.escalate_capacities(
+                        spec_run, policy, box_now=box_now,
+                        n_model=args.model_axis)
+                    print(f"  capacity overflow ({e}); replaying chunk "
+                          f"with atom_capacity={spec_run.atom_capacity}, "
+                          f"halo_capacity={spec_run.halo_capacity} "
+                          f"(carried-box volume folded in)", flush=True)
+                    state, r_ovf = domain.repartition_state(
+                        state, spec_run, box_now=box_now)
+                    assert r_ovf <= 0, f"repartition overflow {r_ovf}"
+                    state = jax.tree.map(lambda x: jax.device_put(x, sh),
+                                         state)
+                    program = build_program(spec_run)
             show(thermo, base, n_segs * seg_len)
             base += n_segs * seg_len
     else:

@@ -1,24 +1,41 @@
-"""Distributed MD: spatial slab decomposition + halo exchange + migration.
+"""Distributed MD: N-D brick domain decomposition + halo exchange + migration.
 
 This is the paper's parallelization (Sec. 3.3, 3.5.4) in JAX-native form:
 
-  * 1-D slab decomposition along x over the ``spatial`` mesh axis (the
-    paper's own communication model in Sec. 3.3 is 1-D). Each slab holds a
-    fixed-capacity, mask-padded atom array — static shapes shard and jit.
-  * Halo (ghost) exchange with the +/- x neighbor slabs via
-    ``lax.ppermute`` (periodic ring), capacity-bounded with overflow flags.
+  * N-D Cartesian brick decomposition over the ``spatial`` mesh axis behind
+    the :class:`repro.md.topology.Topology` abstraction: a shape like
+    ``(4,)``, ``(2, 4)`` or ``(2, 2, 2)`` maps the flat spatial rank to a
+    brick coordinate (the paper's 3-D sub-region layout; its 100M-atom
+    predecessor details the same ghost-region scheme). A ``(k,)`` topology
+    degenerates to the legacy 1-D x-slab layout — same ring, same packs,
+    same op order — so the slab protocol pins the general machinery.
+    Each brick holds a fixed-capacity, mask-padded atom array — static
+    shapes shard and jit.
+  * Halo (ghost) exchange as STAGED PER-AXIS SWEEPS (x, then y, then z):
+    each sweep packs boundary layers from owned atoms PLUS the ghosts of
+    earlier sweeps and exchanges them with the +/- neighbor along that axis
+    via per-axis ``lax.ppermute`` rings. Edge and corner ghosts ride
+    through two/three axis-aligned exchanges instead of 26 explicit
+    neighbor sends — the standard staged-sweep trick. Capacity-bounded with
+    overflow flags.
   * Force evaluation computes contributions on ghosts too; ghost forces are
-    sent BACK to their owner slab (the transpose exchange) and accumulated —
-    the LAMMPS "reverse communication" pattern, hand-written rather than
-    autodiffed through collectives.
+    sent BACK owner-ward by running the sweeps IN REVERSE (z, then y, then
+    x) — each reverse sweep returns that axis's ghost forces to the rank
+    that packed them, scatter-adding into owned slots AND earlier-axis
+    ghost slots, so a corner ghost's force hops home through the same two/
+    three exchanges its coordinates came from (the LAMMPS "reverse
+    communication" pattern, hand-written rather than autodiffed through
+    collectives).
   * The ``model`` mesh axis decomposes the NEIGHBOR dimension of the DP
     descriptor: each model shard evaluates the embedding of a slice of every
     atom's neighbor list; the 4 x M T-matrices are ``psum``-reduced. This is
     the MD analogue of tensor parallelism — the embedding net (95% of FLOPs)
     splits 16-way without touching the spatial layout.
-  * Atom migration between slabs (atoms crossing the boundary) runs at
-    neighbor-rebuild cadence with capacity-bounded ppermute sends; overflow
-    is reported, never silently dropped.
+  * Atom migration between bricks runs at neighbor-rebuild cadence as the
+    same staged per-axis sweeps (split along x -> exchange -> merge, then
+    y, then z): a corner-crossing migrant is routed to its destination
+    brick by two/three axis-aligned hops. Capacity-bounded ppermute sends;
+    overflow is reported PER AXIS, never silently dropped.
 
 "One MPI per NUMA domain, one TF graph per rank" becomes "one SPMD program
 per chip": granularity taken to its limit (DESIGN.md Sec. 3).
@@ -27,6 +44,7 @@ per chip": granularity taken to its limit (DESIGN.md Sec. 3).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -41,6 +59,7 @@ except ImportError:                          # jax 0.4.x
 
 from repro.core.types import DPConfig
 from repro.md import api, integrator, neighbors
+from repro.md.topology import Topology
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
@@ -57,27 +76,61 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
 @dataclasses.dataclass(frozen=True)
 class DomainSpec:
     box: Tuple[float, float, float]      # global orthorhombic box (A)
-    n_slabs: int                          # spatial axis size
-    atom_capacity: int                    # max owned atoms per slab
-    halo_capacity: int                    # max ghost atoms per side
+    n_slabs: int                          # spatial axis size (= prod(topology))
+    atom_capacity: int                    # max owned atoms per brick
+    halo_capacity: int                    # max ghost atoms per side per sweep
     rcut_halo: float                      # rcut + skin
+    #: brick counts per decomposed axis; ``None`` -> the legacy 1-D
+    #: ``(n_slabs,)`` x-slab layout (bit-compatible degenerate case)
+    topology: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        shape = tuple(int(s) for s in (self.topology
+                                       if self.topology is not None
+                                       else (self.n_slabs,)))
+        object.__setattr__(self, "topology", shape)
+        Topology(shape)                        # validates the shape itself
+        assert math.prod(shape) == self.n_slabs, (
+            f"topology {shape} has {math.prod(shape)} bricks but "
+            f"n_slabs={self.n_slabs}")
+
+    @classmethod
+    def for_topology(cls, box, topology, atom_capacity, halo_capacity,
+                     rcut_halo) -> "DomainSpec":
+        """Topology-first constructor: ``n_slabs`` derived from the shape."""
+        topo = Topology.parse(topology)
+        return cls(box=tuple(box), n_slabs=topo.n_ranks,
+                   atom_capacity=atom_capacity, halo_capacity=halo_capacity,
+                   rcut_halo=rcut_halo, topology=topo.shape)
+
+    @property
+    def topo(self) -> Topology:
+        return Topology(self.topology)
 
     @property
     def slab_width(self) -> float:
-        return self.box[0] / self.n_slabs
+        """Legacy spelling: the brick width along x."""
+        return self.box[0] / self.topology[0]
+
+    @property
+    def brick_widths(self) -> Tuple[float, ...]:
+        """Launch-time brick width per DECOMPOSED axis."""
+        return tuple(self.box[a] / s for a, s in enumerate(self.topology))
 
     def validate(self) -> None:
-        assert self.slab_width >= self.rcut_halo, (
-            f"slab width {self.slab_width:.2f} < halo cutoff "
-            f"{self.rcut_halo:.2f}: 1-D decomposition needs >= 1 slab per "
-            f"cutoff (use fewer slabs)")
+        for a, (w, s) in enumerate(zip(self.brick_widths, self.topology)):
+            assert w >= self.rcut_halo, (
+                f"brick width box[{a}]/{s} = {w:.2f} < halo cutoff "
+                f"{self.rcut_halo:.2f}: the decomposition needs "
+                f"box[a]/shape[a] >= rcut_halo on every decomposed axis "
+                f"(use fewer bricks along axis {a})")
         assert self.n_slabs >= 2, (
-            "slab decomposition assumes >= 2 slabs (ghost images must not "
+            "brick decomposition assumes >= 2 bricks (ghost images must not "
             "alias their owners); use md/driver.py for single-domain runs")
 
 
 class SlabState(NamedTuple):
-    """Per-slab padded state; leading dim = n_slabs when global."""
+    """Per-brick padded state; leading dim = n_slabs when global."""
     pos: jax.Array        # (cap, 3)
     vel: jax.Array        # (cap, 3)
     typ: jax.Array        # (cap,) int32
@@ -85,10 +138,25 @@ class SlabState(NamedTuple):
 
 
 def partition_atoms(pos: np.ndarray, vel: np.ndarray, typ: np.ndarray,
-                    spec: DomainSpec) -> Tuple[SlabState, int]:
-    """Host-side initial partition -> stacked (n_slabs, cap, ...) arrays."""
-    slab_of = np.minimum((pos[:, 0] / spec.slab_width).astype(np.int64),
-                         spec.n_slabs - 1)
+                    spec: DomainSpec,
+                    box: Optional[np.ndarray] = None
+                    ) -> Tuple[SlabState, int]:
+    """Host-side initial partition -> stacked (n_slabs, cap, ...) arrays.
+
+    ``box`` overrides the launch-time geometry (a barostat-moved carried
+    box changes every brick width) — repartitioning after a capacity
+    escalation must bin by the box the atoms actually live in.
+    """
+    topo = spec.topo
+    box_np = np.asarray(box if box is not None else spec.box, float)
+    rank = np.zeros(len(pos), np.int64)
+    for a in topo.axes:
+        w = box_np[a] / topo.shape[a]
+        # clamp BOTH ends: a slightly-negative coordinate (an atom that
+        # drifted past a face since the last migration) must bin to brick
+        # 0, never to a nonexistent negative rank (silent atom loss)
+        c = np.clip((pos[:, a] / w).astype(np.int64), 0, topo.shape[a] - 1)
+        rank += c * topo.strides[a]
     cap = spec.atom_capacity
     out_pos = np.zeros((spec.n_slabs, cap, 3), np.float32)
     out_vel = np.zeros((spec.n_slabs, cap, 3), np.float32)
@@ -96,7 +164,7 @@ def partition_atoms(pos: np.ndarray, vel: np.ndarray, typ: np.ndarray,
     out_mask = np.zeros((spec.n_slabs, cap), bool)
     overflow = 0
     for s in range(spec.n_slabs):
-        idx = np.nonzero(slab_of == s)[0]
+        idx = np.nonzero(rank == s)[0]
         n = len(idx)
         overflow = max(overflow, n - cap)
         idx = idx[:cap]
@@ -108,28 +176,99 @@ def partition_atoms(pos: np.ndarray, vel: np.ndarray, typ: np.ndarray,
                      typ=jnp.asarray(out_typ), mask=jnp.asarray(out_mask)), overflow
 
 
+def gather_atoms(state: SlabState) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side inverse of :func:`partition_atoms`: live atoms, flat."""
+    pos = np.asarray(state.pos).reshape(-1, 3)
+    vel = np.asarray(state.vel).reshape(-1, 3)
+    typ = np.asarray(state.typ).reshape(-1)
+    mask = np.asarray(state.mask).reshape(-1)
+    return pos[mask], vel[mask], typ[mask]
+
+
+def capacity_scale_for_box(spec: DomainSpec, box_now) -> float:
+    """Launch-volume / current-volume, clamped >= 1.
+
+    The density rise a barostat-compressed box implies: every per-brick
+    capacity (owned atoms, halo shell, migration packets) must scale with
+    it — growing ``sel`` alone leaves the brick arrays too small. Thin
+    spec-level spelling of :meth:`EscalationPolicy.volume_scale` (one
+    implementation of the clamp semantics).
+    """
+    from repro.md import stepper
+    return stepper.EscalationPolicy.volume_scale(spec.box, box_now)
+
+
+def escalate_capacities(spec: DomainSpec, policy, box_now=None,
+                        n_model: int = 1) -> DomainSpec:
+    """Grow DomainSpec capacities on overflow, folding the carried box in.
+
+    ``policy`` is a :class:`repro.md.stepper.EscalationPolicy`; the growth
+    factor is ``max(policy.growth, V_launch / V_now)`` so a replay after a
+    barostat squeeze jumps straight to a capacity that holds the CURRENT
+    density instead of creeping up by ``policy.growth`` per retry.
+    ``atom_capacity`` stays divisible by ``n_model`` (the atoms-decomp
+    layout constraint). The returned spec is REBASED onto ``box_now``: the
+    launch box is also the reference the static cell grids derive from, so
+    a replay against a squeezed carried box must re-derive them (and the
+    next volume-scale comparison) from the box the atoms actually live in.
+    """
+    scale = 1.0 if box_now is None else capacity_scale_for_box(spec, box_now)
+    atom = policy.grow(spec.atom_capacity, scale)
+    atom = -(-atom // n_model) * n_model
+    halo = policy.grow(spec.halo_capacity, scale)
+    new_box = (spec.box if box_now is None
+               else tuple(float(b) for b in np.asarray(box_now).reshape(-1)))
+    return dataclasses.replace(spec, box=new_box, atom_capacity=atom,
+                               halo_capacity=halo)
+
+
+def repartition_state(state: SlabState, spec_new: DomainSpec,
+                      box_now=None) -> Tuple[SlabState, int]:
+    """Host-side re-partition into (escalated) ``spec_new`` capacities.
+
+    Bins by ``box_now`` when the carried box moved — the replay path after
+    a capacity overflow under a barostat squeeze.
+    """
+    pos, vel, typ = gather_atoms(state)
+    return partition_atoms(pos, vel, typ, spec_new, box=box_now)
+
+
 def pad_sel_for(cfg: DPConfig, n_shards: int) -> DPConfig:
     """Pad each neighbor-type section to a model-axis-divisible size."""
     sel = tuple(-(-s // n_shards) * n_shards for s in cfg.sel)
     return dataclasses.replace(cfg, sel=sel)
 
 
+def _flat_rank(spatial_axis):
+    """Flat spatial rank inside shard_map; handles a tuple of mesh axes
+    (multi-pod meshes flatten (pod, data) in C order)."""
+    if isinstance(spatial_axis, str):
+        return jax.lax.axis_index(spatial_axis)
+    idx = jax.lax.axis_index(spatial_axis[0])
+    for a in spatial_axis[1:]:
+        idx = idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+    return idx
+
+
 # --------------------------------------------------------------- halo pieces
 
 def _pack_boundary(pos, typ, mask, lo_side: bool, spec: DomainSpec,
-                   slab_lo: jax.Array, slab_width=None):
-    """Select owned atoms within rcut of a slab face into a fixed buffer.
+                   face_lo: jax.Array, width=None, dim: int = 0):
+    """Select atoms within rcut of a brick face (along axis ``dim``) into a
+    fixed buffer.
 
-    ``slab_width`` may be a TRACED value derived from the carried box (the
-    barostat moves the box, the slab faces move with it); ``None`` keeps the
-    launch-time geometry."""
-    if slab_width is None:
-        slab_width = spec.slab_width
-    x_rel = pos[:, 0] - slab_lo
+    ``width`` may be a TRACED value derived from the carried box (the
+    barostat moves the box, the brick faces move with it); ``None`` keeps
+    the launch-time geometry. The caller may pass ghosts of earlier sweeps
+    in ``pos``/``mask`` too — that is what routes edge/corner ghosts
+    through the staged axis sweeps."""
+    if width is None:
+        width = spec.brick_widths[dim]
+    x_rel = pos[:, dim] - face_lo
     if lo_side:
         sel = mask & (x_rel < spec.rcut_halo)
     else:
-        sel = mask & (x_rel > slab_width - spec.rcut_halo)
+        sel = mask & (x_rel > width - spec.rcut_halo)
     # stable-compact selected atoms to the buffer front
     order = jnp.argsort(jnp.where(sel, 0, 1), stable=True)
     hc = spec.halo_capacity
@@ -141,40 +280,38 @@ def _pack_boundary(pos, typ, mask, lo_side: bool, spec: DomainSpec,
     return buf_pos, buf_typ, valid, idx, overflow
 
 
-def _halo_exchange(pos, typ, mask, spec: DomainSpec, slab_lo, axis: str,
-                   box=None, slab_width=None):
-    """Ghost atoms from both x-neighbor slabs (periodic ring).
+def _halo_sweep(pos, typ, mask, spec: DomainSpec, dim: int, coord_d,
+                n_d: int, box_d, width_d, face_lo, axis,
+                plus_pairs, minus_pairs):
+    """ONE staged halo sweep: ghost atoms from both axis-``dim`` neighbors.
 
-    Returns (ghost_pos (2*hc, 3) shifted into this slab's frame, ghost_typ,
-    ghost_mask, reverse-comm bookkeeping, overflow). ``box``/``slab_width``
-    carry the DYNAMIC geometry when the box rides in the scan carry;
-    ``None`` keeps the launch-time DomainSpec values.
+    ``pos``/``typ``/``mask`` are owned atoms plus the ghosts of EARLIER
+    sweeps (that inclusion is what delivers edge/corner ghosts in two/three
+    hops). Returns (ghost_pos (2*hc, 3) shifted into this brick's frame,
+    ghost_typ, ghost_mask, reverse-comm bookkeeping, overflow).
+    ``box_d``/``width_d`` carry the DYNAMIC geometry when the box rides in
+    the scan carry.
     """
-    n = spec.n_slabs
-    right = [(i, (i + 1) % n) for i in range(n)]
-    left = [(i, (i - 1) % n) for i in range(n)]
-
-    # pack my boundary layers
     lo_pos, lo_typ, lo_valid, lo_idx, ovf_l = _pack_boundary(
-        pos, typ, mask, True, spec, slab_lo, slab_width)
+        pos, typ, mask, True, spec, face_lo, width_d, dim)
     hi_pos, hi_typ, hi_valid, hi_idx, ovf_r = _pack_boundary(
-        pos, typ, mask, False, spec, slab_lo, slab_width)
+        pos, typ, mask, False, spec, face_lo, width_d, dim)
 
-    # my low boundary -> left neighbor's ghost; high -> right neighbor
-    from_right = jax.tree.map(lambda t: jax.lax.ppermute(t, axis, left),
-                              (lo_pos, lo_typ, lo_valid))
-    from_left = jax.tree.map(lambda t: jax.lax.ppermute(t, axis, right),
-                             (hi_pos, hi_typ, hi_valid))
+    # my low boundary -> minus neighbor's ghosts; high -> plus neighbor
+    from_plus = jax.tree.map(
+        lambda t: jax.lax.ppermute(t, axis, minus_pairs),
+        (lo_pos, lo_typ, lo_valid))
+    from_minus = jax.tree.map(
+        lambda t: jax.lax.ppermute(t, axis, plus_pairs),
+        (hi_pos, hi_typ, hi_valid))
 
-    # shift ghosts into this slab's coordinate frame (periodic in x)
-    box_x = spec.box[0] if box is None else box[0]
-    idx_s = jax.lax.axis_index(axis)
-    fl_pos, fl_typ, fl_valid = from_left
-    fr_pos, fr_typ, fr_valid = from_right
-    fl_shift = jnp.where(idx_s == 0, -box_x, 0.0)       # wrap from slab n-1
-    fr_shift = jnp.where(idx_s == n - 1, box_x, 0.0)    # wrap from slab 0
-    fl_pos = fl_pos.at[:, 0].add(fl_shift)
-    fr_pos = fr_pos.at[:, 0].add(fr_shift)
+    # shift ghosts into this brick's coordinate frame (periodic along dim)
+    fl_pos, fl_typ, fl_valid = from_minus
+    fr_pos, fr_typ, fr_valid = from_plus
+    fl_shift = jnp.where(coord_d == 0, -box_d, 0.0)      # wrap from brick n-1
+    fr_shift = jnp.where(coord_d == n_d - 1, box_d, 0.0)  # wrap from brick 0
+    fl_pos = fl_pos.at[:, dim].add(fl_shift)
+    fr_pos = fr_pos.at[:, dim].add(fr_shift)
 
     ghost_pos = jnp.concatenate([fl_pos, fr_pos], axis=0)
     ghost_typ = jnp.concatenate([fl_typ, fr_typ], axis=0)
@@ -184,40 +321,41 @@ def _halo_exchange(pos, typ, mask, spec: DomainSpec, slab_lo, axis: str,
     return ghost_pos, ghost_typ, ghost_mask, book, jnp.maximum(ovf_l, ovf_r)
 
 
-def _reverse_force_comm(ghost_force, book, axis: str, n: int, cap: int):
-    """Send ghost-atom force contributions back to their owner slabs.
+def _reverse_sweep(f_prefix, ghost_force, book, axis, plus_pairs,
+                   minus_pairs):
+    """Return ONE axis's ghost-force segment to the ranks that packed it.
 
-    Slot order is preserved end-to-end: my hi-boundary pack became the right
-    neighbor's from_left ghost buffer, so the returned buffer indexes
-    straight back through hi_idx (and symmetrically for lo).
+    Slot order is preserved end-to-end: my hi-boundary pack became the plus
+    neighbor's from_minus ghost buffer, so the returned buffer indexes
+    straight back through hi_idx (and symmetrically for lo). The scatter
+    targets land in owned slots AND earlier-axis ghost slots — running the
+    sweeps in reverse is what hops a corner ghost's force home.
     """
     hc = ghost_force.shape[0] // 2
-    f_from_left = ghost_force[:hc]      # ghosts owned by my LEFT neighbor
-    f_from_right = ghost_force[hc:]     # ghosts owned by my RIGHT neighbor
-    right = [(i, (i + 1) % n) for i in range(n)]
-    left = [(i, (i - 1) % n) for i in range(n)]
+    f_from_minus = ghost_force[:hc]     # ghosts owned minus-ward of me
+    f_from_plus = ghost_force[hc:]      # ghosts owned plus-ward of me
     # ppermute(x, [(i, j)]) delivers x_i to j: send owner-ward.
-    recv_hi = jax.lax.ppermute(f_from_left, axis, left)    # forces for MY hi
-    recv_lo = jax.lax.ppermute(f_from_right, axis, right)  # forces for MY lo
-    f_local = jnp.zeros((cap, 3), ghost_force.dtype)
-    f_local = f_local.at[book["hi_idx"]].add(
+    recv_hi = jax.lax.ppermute(f_from_minus, axis, minus_pairs)
+    recv_lo = jax.lax.ppermute(f_from_plus, axis, plus_pairs)
+    contrib = jnp.zeros_like(f_prefix)
+    contrib = contrib.at[book["hi_idx"]].add(
         recv_hi * book["hi_valid"][:, None])
-    f_local = f_local.at[book["lo_idx"]].add(
+    contrib = contrib.at[book["lo_idx"]].add(
         recv_lo * book["lo_valid"][:, None])
-    return f_local
+    return f_prefix + contrib
 
 
-# ------------------------------------------------------- neighbor list (slab)
+# ------------------------------------------------------ neighbor list (brick)
 
 def _slab_neighbors(pos_all, typ_all, mask_all, cfg: DPConfig, rc2: float,
                     n_local: int, box):
     """Brute-force type-sectioned neighbor list for local atoms vs all atoms.
 
-    O(cap * (cap + 2hc)) — the slab-local cost; cell lists drop in here for
-    production sizes (the dry-run path uses this exact function with
-    ShapeDtypeStructs, so the compile proof covers it). y/z periodicity via
-    min-image (x is ghost-resolved; min-image no-ops there for box > 2 rc).
-    """
+    O(cap * (cap + ghosts)) — the brick-local cost; cell lists drop in here
+    for production sizes (the dry-run path uses this exact function with
+    ShapeDtypeStructs, so the compile proof covers it). Undecomposed axes
+    are periodic via min-image (decomposed axes are ghost-resolved; the
+    caller passes 1e30 there so min-image no-ops)."""
     rij = pos_all[None, :, :] - pos_all[:n_local, None, :]
     rij = rij - box * jnp.round(rij / box)
     d2 = jnp.sum(rij * rij, axis=-1)
@@ -246,9 +384,9 @@ def make_local_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
     """Per-shard MD step body — the code that runs INSIDE shard_map.
 
     Returns ``step_local(params, pos, vel, typ, mask, ens, box, baro) ->
-    ((pos, vel, typ, mask, ens, box, baro), thermo)`` on squeezed per-slab
-    arrays. Fully traceable (halo exchange, rebuild, force, integration —
-    no host branches), so it embeds equally in the per-segment engine
+    ((pos, vel, typ, mask, ens, box, baro), thermo)`` on squeezed per-brick
+    arrays. Fully traceable (halo sweeps, rebuild, force, integration — no
+    host branches), so it embeds equally in the per-segment engine
     (:func:`make_distributed_md_step`) and in the whole-trajectory two-level
     scan (:func:`make_outer_md_program`).
 
@@ -256,36 +394,35 @@ def make_local_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
     from the composable API (``md/api.py``); ``cfg``/``impl`` remain as the
     legacy spelling for DP + NVE (``potential=None`` wraps them in a
     :class:`api.DPPotential`). The ensemble's extra state ``ens`` (RNG key,
-    ...) rides in the scan carry next to the slab arrays.
+    ...) rides in the scan carry next to the brick arrays.
 
     The BOX ``box`` (3,) is the dynamic, globally-replicated simulation
-    box: the slab geometry (slab width, faces, min-image wrap) is derived
-    from it every step, and a traced check that the rescaled slab still
-    covers ``rcut_halo`` reports through ``thermo["geom_overflow"]`` (the
-    existing overflow-flag channel — the PR-3 launch-time assert, evaluated
-    against the CARRIED box at every rebuild). Each step also computes the
-    slab virial via the strain derivative ``W = -dE/d(eps)`` of its own
-    energy terms (one joint backward pass with the forces), psums it into
-    the global stress, and — when a ``barostat`` is closed over — applies
-    the affine box/position rescale identically on every slab (the barostat
-    state ``baro`` is REPLICATED, so every slab draws the same SCR noise
-    and the global box stays consistent).
+    box: every brick extent (per-axis width, faces, min-image wrap) is
+    derived from it each step via ``spec.topo``, and a traced check that
+    every rescaled brick still covers ``rcut_halo`` on every decomposed
+    axis reports through ``thermo["geom_overflow"]``. Each step also
+    computes the brick virial via the strain derivative ``W = -dE/d(eps)``
+    of its own energy terms (one joint backward pass with the forces),
+    psums it into the global stress, and — when a ``barostat`` is closed
+    over — applies the affine box/position rescale identically on every
+    brick (the barostat state ``baro`` is REPLICATED, so every brick draws
+    the same SCR noise and the global box stays consistent).
 
     decomp:
       "slots" — model shards take complementary NEIGHBOR-SLOT slices of every
                 atom; partial per-atom energy terms psum-reduce (for DP, the
                 partial T matrices — validated vs the single-process
                 reference to 1e-10).
-      "atoms" — model shards take complementary ATOM slices of the slab
+      "atoms" — model shards take complementary ATOM slices of the brick
                 (search + energy + grad end-to-end); per-shard forces
                 psum-reduce. Better balanced at production sizes and keeps
                 the neighbor search per-chip — the multi-pod MD dry-run path.
-    neighbor: "brute" O(N^2) (tests) | "cells" O(N) slab cell list.
+    neighbor: "brute" O(N^2) (tests) | "cells" O(N) brick cell list.
     """
     spec.validate()
+    topo = spec.topo
     potential = potential or api.DPPotential(cfg, impl=impl)
     ensemble = ensemble or api.NVE()
-    n_slabs_f = float(spec.n_slabs)
     n_model = mesh.shape[model_axis]
     if isinstance(spatial_axis, str):
         n_spatial = mesh.shape[spatial_axis]
@@ -314,11 +451,15 @@ def make_local_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
     assert spec.atom_capacity % n_model == 0 or decomp == "slots"
     atom_slice = spec.atom_capacity // n_model
     n_centers = atom_slice if decomp == "atoms" else spec.atom_capacity
+    # host-side per-axis ring pairs over the flat spatial rank
+    plus_pairs = [topo.plus_ring(a) for a in topo.axes]
+    minus_pairs = [topo.minus_ring(a) for a in topo.axes]
     nbr_fn = None
     if neighbor == "cells":
         from repro.md import slab_cells
         nbr_fn = slab_cells.make_slab_neighbor_fn(
-            cfg_layout, spec.box, spec.slab_width, spec.rcut_halo, n_centers)
+            cfg_layout, spec.box, spec.slab_width, spec.rcut_halo, n_centers,
+            topology=spec.topology)
 
     def slot_energy(pos_all, eps, nlist_slice, typ_all, mask_local, params,
                     boxm):
@@ -352,33 +493,67 @@ def make_local_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
 
     def step_local(params, pos, vel, typ, mask, ens, box, baro):
         cap = pos.shape[0]
-        idx_s = jax.lax.axis_index(spatial_axis)
-        slab_width = box[0] / n_slabs_f
-        slab_lo = idx_s.astype(jnp.float32) * slab_width
-        # min-image applies to y/z only: x periodicity is ghost-resolved,
-        # and a full-box x-wrap would alias ghost images back onto local
-        # atoms when box_x/2 < rcut + slab_width (1-2 slab configurations).
-        boxm = jnp.stack([jnp.float32(1e30), box[1], box[2]])
-        # the PR-3 cutoff-vs-halo assert, traced against the CARRIED box:
-        # a barostat-shrunk slab narrower than rcut_halo silently loses
-        # pairs (ghosts only cover one neighbor slab), so it must surface
-        # through the overflow-flag channel, not a launch-time assert.
-        geom_ovf = (slab_width < spec.rcut_halo).astype(jnp.int32)
+        idx_s = _flat_rank(spatial_axis)
+        # per-axis brick geometry from the CARRIED box
+        widths = [box[a] / float(topo.shape[a]) for a in topo.axes]
+        coords = [topo.coord_along(idx_s, a) for a in topo.axes]
+        faces = [coords[a].astype(jnp.float32) * widths[a]
+                 for a in topo.axes]
+        # min-image applies to UNDECOMPOSED axes only: decomposed-axis
+        # periodicity is ghost-resolved, and a full-box wrap there would
+        # alias ghost images back onto local atoms when
+        # box/2 < rcut + width (1-2 brick configurations).
+        boxm = jnp.stack([jnp.float32(1e30) if a < topo.ndim else box[a]
+                          for a in range(3)])
+        # the cutoff-vs-halo assert, traced against the CARRIED box: a
+        # barostat-shrunk brick narrower than rcut_halo on ANY decomposed
+        # axis silently loses pairs (ghosts only cover one neighbor brick),
+        # so it must surface through the overflow-flag channel, not a
+        # launch-time assert.
+        geom_ovf = jnp.zeros((), jnp.int32)
+        for a in topo.axes:
+            geom_ovf = jnp.maximum(
+                geom_ovf, (widths[a] < spec.rcut_halo).astype(jnp.int32))
         eps0 = jnp.zeros((3, 3), pos.dtype)
 
-        # -- halo exchange ------------------------------------------------
-        ghost_pos, ghost_typ, ghost_mask, book, h_ovf = _halo_exchange(
-            pos, typ, mask, spec, slab_lo, spatial_axis, box, slab_width)
-        pos_all = jnp.concatenate([pos, ghost_pos], axis=0)
-        typ_all = jnp.concatenate([typ, ghost_typ], axis=0)
-        mask_all = jnp.concatenate([mask, ghost_mask], axis=0)
+        # -- staged halo sweeps (x, then y, then z) -----------------------
+        # each sweep packs from owned atoms + earlier sweeps' ghosts, so
+        # edge/corner ghosts arrive via two/three axis-aligned exchanges
+        pos_all, typ_all, mask_all = pos, typ, mask
+        books = []
+        h_ovf = jnp.zeros((), jnp.int32)
+        for a in topo.axes:
+            g_pos, g_typ, g_mask, book, ovf = _halo_sweep(
+                pos_all, typ_all, mask_all, spec, a, coords[a],
+                topo.shape[a], box[a], widths[a], faces[a], spatial_axis,
+                plus_pairs[a], minus_pairs[a])
+            books.append((pos_all.shape[0], book, a))
+            pos_all = jnp.concatenate([pos_all, g_pos], axis=0)
+            typ_all = jnp.concatenate([typ_all, g_typ], axis=0)
+            mask_all = jnp.concatenate([mask_all, g_mask], axis=0)
+            h_ovf = jnp.maximum(h_ovf, ovf)
+
+        def reverse_comm(force_all):
+            # the transpose: run the sweeps IN REVERSE (z, y, x) — each
+            # hop returns that axis's ghost forces; scatter targets include
+            # earlier-axis ghost slots, so corner forces hop home.
+            for prefix, book, a in reversed(books):
+                force_all = _reverse_sweep(
+                    force_all[:prefix], force_all[prefix:], book,
+                    spatial_axis, plus_pairs[a], minus_pairs[a])
+            return force_all
+
+        brick_lo3 = jnp.stack(
+            [faces[a] if a < topo.ndim else jnp.float32(0.0)
+             for a in range(3)])
+        widths_t = tuple(widths)
 
         if decomp == "atoms":
             # -- model axis slices ATOMS: search + energy + grad per slice --
             start = jax.lax.axis_index(model_axis).astype(jnp.int32) * atom_slice
             if nbr_fn is not None:
-                nlist, n_ovf = nbr_fn(pos_all, typ_all, mask_all, slab_lo,
-                                      start, box=box, slab_width=slab_width)
+                nlist, n_ovf = nbr_fn(pos_all, typ_all, mask_all, brick_lo3,
+                                      start, box=box, widths=widths_t)
             else:
                 nlist_full, n_ovf = _slab_neighbors(
                     pos_all, typ_all, mask_all, cfg_layout, rc2, cap, boxm)
@@ -397,13 +572,12 @@ def make_local_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
             e_local = jax.lax.psum(e_slice, model_axis)
             force_all = -jax.lax.psum(de_dpos, model_axis)
             virial = -jax.lax.psum(de_deps, model_axis)
-            force = force_all[:cap] + _reverse_force_comm(
-                force_all[cap:], book, spatial_axis, spec.n_slabs, cap)
+            force = reverse_comm(force_all)
         else:
             # -- model axis slices neighbor SLOTS (psum'd T matrices) -------
             if nbr_fn is not None:
-                nlist, n_ovf = nbr_fn(pos_all, typ_all, mask_all, slab_lo, 0,
-                                      box=box, slab_width=slab_width)
+                nlist, n_ovf = nbr_fn(pos_all, typ_all, mask_all, brick_lo3,
+                                      0, box=box, widths=widths_t)
             else:
                 nlist, n_ovf = _slab_neighbors(pos_all, typ_all, mask_all,
                                                cfg_layout, rc2, cap, boxm)
@@ -425,8 +599,7 @@ def make_local_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
                 e_fn, argnums=(0, 1))(pos_all, eps0)
             e_local = e_frac * n_model
             force_all = -de_dpos          # includes ghost contributions
-            force = force_all[:cap] + _reverse_force_comm(
-                force_all[cap:], book, spatial_axis, spec.n_slabs, cap)
+            force = reverse_comm(force_all)
             # model axis holds complementary neighbor slices: reduce forces
             # (and this shard's slot contribution to the virial).
             force = jax.lax.psum(force, model_axis)
@@ -438,14 +611,15 @@ def make_local_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
         pos = ensemble.drift(pos, vel, dt_fs, None)
         vel = ensemble.half_kick(vel, force, m_vec, dt_fs)
         vel, ens = ensemble.finalize(vel, m_vec, dt_fs, ens, amask=mask)
-        # keep x within the global box (y, z wrap via min-image in rij)
+        # decomposed-axis bounds restore via migration; undecomposed axes
+        # wrap via min-image in rij
         pos = jnp.where(mask[:, None], pos, 0.0)
 
         ke = 0.5 * jnp.sum(mass_table[typ] * mask * jnp.sum(vel * vel, -1)) \
             / integrator.FORCE_TO_ACC
         # -- global stress + barostat --------------------------------------
-        # per-slab virial/kinetic tensors psum to the GLOBAL stress; every
-        # slab computes the identical tensor, so the (replicated) barostat
+        # per-brick virial/kinetic tensors psum to the GLOBAL stress; every
+        # brick computes the identical tensor, so the (replicated) barostat
         # rescale keeps box/positions consistent across the mesh.
         kin = integrator.kinetic_tensor(vel, m_vec, mask)
         vol = integrator.volume_of(box)
@@ -484,11 +658,11 @@ THERMO_KEYS = ("pe", "ke", "n_atoms", "halo_overflow", "nbr_overflow",
 
 def init_ensemble_state(ensemble: api.Ensemble, n_slabs: int, mesh: Mesh,
                         spatial_axis="data"):
-    """Stacked per-slab ensemble state, device_put sharded over the slabs.
+    """Stacked per-brick ensemble state, device_put sharded over the bricks.
 
     Stateless ensembles return an empty pytree (zero overhead); stateful
-    ones (Langevin) get one state per slab with the slab index folded into
-    the RNG seed, so slabs draw independent noise streams.
+    ones (Langevin) get one state per brick with the brick index folded into
+    the RNG seed, so bricks draw independent noise streams.
     """
     ens = ensemble.init_state(n_slabs)
     sh = NamedSharding(mesh, P(spatial_axis))
@@ -509,9 +683,9 @@ def make_distributed_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
     ((SlabState, ens, box, baro), thermo)`` step.
 
     The returned function expects SlabState (and ensemble-state) leaves
-    stacked over slabs and sharded P(spatial_axis) on dim 0; params, the
+    stacked over bricks and sharded P(spatial_axis) on dim 0; params, the
     dynamic ``box`` (3,) and the barostat state ``baro`` replicated (the
-    box is global — every slab sees and rescales the same one). ``ens``
+    box is global — every brick sees and rescales the same one). ``ens``
     comes from :func:`init_ensemble_state` (an empty pytree for stateless
     ensembles); ``baro`` from ``barostat.init_state()`` (``()`` without a
     barostat). See :func:`make_local_md_step` for the potential/ensemble/
@@ -523,7 +697,7 @@ def make_distributed_md_step(cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
         potential=potential, ensemble=ensemble, barostat=barostat)
 
     def step(params, state: SlabState, ens, box, baro):
-        # shard_map keeps the sharded slab dim at local size 1 — squeeze it.
+        # shard_map keeps the sharded brick dim at local size 1 — squeeze it.
         pos, vel, typ, mask = (x[0] for x in state)
         ens_l = jax.tree.map(lambda x: x[0], ens)
         (pos, vel, typ, mask, ens_l, box, baro), thermo = step_local(
@@ -583,28 +757,38 @@ def check_segment_thermo(thermo) -> None:
     Replaces the seed's per-step ``int(...)`` host syncs: flags for the whole
     segment arrive in one fetch. Capacity overflow in a capacity-bounded
     collective drops atoms silently, so a hard error is the only safe exit —
-    escalation here means re-partitioning with larger capacities. The
+    escalation here means re-partitioning with larger capacities (see
+    :func:`escalate_capacities`, which folds the carried box volume into
+    the growth so a barostat squeeze escalates in one hop). The
     ``geom_overflow`` flag is the traced cutoff-vs-halo check: the carried
-    box shrank until a slab no longer covers ``rcut_halo`` (pairs would be
-    silently lost) — re-partition with fewer slabs or a smaller cutoff.
+    box shrank until a brick no longer covers ``rcut_halo`` on some
+    decomposed axis (pairs would be silently lost) — re-partition with
+    fewer bricks along that axis or a smaller cutoff.
     """
     if "geom_overflow" in thermo and \
             int(np.max(np.asarray(thermo["geom_overflow"]))) > 0:
         raise RuntimeError(
-            "geom_overflow: the carried box shrank below the slab "
-            "decomposition's cutoff+halo geometry (slab width < rcut_halo); "
-            "pairs beyond the single-neighbor halo would be silently lost — "
-            "re-partition with fewer slabs (DomainSpec)")
+            "geom_overflow: the carried box shrank below the brick "
+            "decomposition's cutoff+halo geometry (a brick width < "
+            "rcut_halo); pairs beyond the single-neighbor halo would be "
+            "silently lost — re-partition with fewer bricks on that axis "
+            "(DomainSpec topology)")
     keys = ("halo_overflow", "nbr_overflow") + \
         (("mig_overflow",) if "mig_overflow" in thermo else ())
     for key in keys:
-        worst = int(np.max(np.asarray(thermo[key])))
+        flags = np.asarray(thermo[key])
+        worst = int(np.max(flags))
         if worst > 0:
-            msg = (f"{key} by {worst} atoms during segment; rerun with "
-                   f"larger halo/atom capacities (DomainSpec) — "
+            detail = ""
+            if key == "mig_overflow" and flags.ndim and flags.shape[-1] > 1:
+                # per-axis migration flags: name the worst sweep axis
+                axis_worst = np.max(flags.reshape(-1, flags.shape[-1]), 0)
+                detail = f" (per-axis worst: {axis_worst.tolist()})"
+            msg = (f"{key} by {worst} atoms during segment{detail}; rerun "
+                   f"with larger halo/atom capacities (DomainSpec) — "
                    f"capacity-bounded exchanges drop atoms past capacity")
             if worst >= int(neighbors.GRID_INVALID):
-                msg = (f"{key}: the carried box moved past the static slab "
+                msg = (f"{key}: the carried box moved past the static brick "
                        f"cell grid's validity (a cell dimension < "
                        f"rcut_halo) — the stencil would miss pairs; "
                        f"re-partition from the current box")
@@ -614,32 +798,35 @@ def check_segment_thermo(thermo) -> None:
 # ------------------------------------------------------------------ migration
 #
 # Split into PURE pieces (split / merge — no collectives, fixed send/recv
-# slot capacities, fully static shapes) composed around a single ppermute
-# pair in _migrate_local. The pure pieces are what the invariant suite
-# drives across an emulated slab ring, and the scan-safety of the whole
-# path is what lets make_outer_md_program fold migration into the
-# two-level scanned trajectory.
+# slot capacities, fully static shapes) composed around one ppermute pair
+# PER DECOMPOSED AXIS in _migrate_local: the staged sweeps (x, then y, then
+# z) route a corner-crossing migrant through two/three axis-aligned hops.
+# The pure pieces are what the invariant suite drives across emulated slab
+# rings AND tori, and the scan-safety of the whole path is what lets
+# make_outer_md_program fold migration into the two-level scanned
+# trajectory.
 
-def split_migrants(pos, vel, typ, mask, spec: DomainSpec, slab_lo,
-                   slab_width=None):
-    """Partition a slab into compacted stayers + fixed-capacity send packets.
+def split_migrants(pos, vel, typ, mask, spec: DomainSpec, face_lo,
+                   width=None, dim: int = 0):
+    """Partition a brick into compacted stayers + fixed-capacity send
+    packets along ONE axis.
 
     Returns ``(stayers, left_pkt, right_pkt, pack_ovf)`` where ``stayers``
     is ``(pos_c, vel_c, typ_c, mask_c, n_stay)`` (stay-compacted, stale
     slots ZEROED — a stale copy of a departed atom would otherwise coincide
     exactly with its live ghost: NaN force gradients at r = 0) and each
-    packet is ``(pos (hc, 3), vel, typ, valid)`` bound for that x-neighbor.
-    Send capacity is ``spec.halo_capacity`` slots per side; excess migrants
-    are reported in ``pack_ovf``, never silently dropped into the exchange.
-    ``slab_width`` may be traced (carried-box geometry); ``None`` keeps the
-    launch-time value.
+    packet is ``(pos (hc, 3), vel, typ, valid)`` bound for the -/+
+    neighbor along axis ``dim``. Send capacity is ``spec.halo_capacity``
+    slots per side; excess migrants are reported in ``pack_ovf``, never
+    silently dropped into the exchange. ``width`` may be traced
+    (carried-box geometry); ``None`` keeps the launch-time value.
     """
-    if slab_width is None:
-        slab_width = spec.slab_width
+    if width is None:
+        width = spec.brick_widths[dim]
     hc = spec.halo_capacity
-    x = pos[:, 0] - slab_lo
+    x = pos[:, dim] - face_lo
     go_left = mask & (x < 0)
-    go_right = mask & (x >= slab_width)
+    go_right = mask & (x >= width)
     stay = mask & ~go_left & ~go_right
 
     def pack(sel):
@@ -662,34 +849,36 @@ def split_migrants(pos, vel, typ, mask, spec: DomainSpec, slab_lo,
     return stayers, left_pkt, right_pkt, jnp.maximum(l_ovf, r_ovf)
 
 
-def merge_arrivals(stayers, in_l, in_r, idx_s, spec: DomainSpec, box=None):
-    """Append arrival packets to the compacted stayers of one slab.
+def merge_arrivals(stayers, in_l, in_r, idx_s, spec: DomainSpec, box=None,
+                   dim: int = 0):
+    """Append arrival packets to the compacted stayers of one brick.
 
-    ``in_l`` / ``in_r`` are the packets received from the left / right
-    x-neighbor (each ``(pos, vel, typ, valid)``); ``idx_s`` is this slab's
-    ring index (traced inside shard_map, a plain int in the invariant
-    harness). Periodic wrap in x is applied to migrants that crossed the box
-    ends. Returns ``((pos, vel, typ, mask), overflow)`` with arrivals
-    placed at the first free slots; atom-capacity overflow is reported and
-    the excess arrivals dropped by ``mode="drop"`` (the flag makes the
-    chunk retry/abort — the data is never silently wrong). ``box`` carries
-    the dynamic geometry; ``None`` keeps the launch-time DomainSpec box.
+    ``in_l`` / ``in_r`` are the packets received from the -/+ neighbor
+    along axis ``dim`` (each ``(pos, vel, typ, valid)``); ``idx_s`` is this
+    brick's COORDINATE along that axis (traced inside shard_map, a plain
+    int in the invariant harness). Periodic wrap along ``dim`` is applied
+    to migrants that crossed the box ends. Returns ``((pos, vel, typ,
+    mask), overflow)`` with arrivals placed at the first free slots;
+    atom-capacity overflow is reported and the excess arrivals dropped by
+    ``mode="drop"`` (the flag makes the chunk retry/abort — the data is
+    never silently wrong). ``box`` carries the dynamic geometry; ``None``
+    keeps the launch-time DomainSpec box.
     """
-    n = spec.n_slabs
-    box_x = spec.box[0] if box is None else box[0]
+    n = spec.topology[dim]
+    box_d = spec.box[dim] if box is None else box[dim]
     pos_c, vel_c, typ_c, mask_c, n_stay = stayers
     cap = pos_c.shape[0]
-    # periodic wrap for migrants crossing the box ends:
-    # from slab n-1 arriving at slab 0: x ~ box_x -> x - box_x;
-    # from slab 0 arriving at slab n-1: x < 0 -> x + box_x.
+    # periodic wrap for migrants crossing the box ends along dim:
+    # from brick n-1 arriving at brick 0: x ~ box_d -> x - box_d;
+    # from brick 0 arriving at brick n-1: x < 0 -> x + box_d.
     ilp, ilv, ilt, ilval = in_l
     irp, irv, irt, irval = in_r
-    ilp = ilp.at[:, 0].set(jnp.where(
-        (idx_s == 0) & ilval & (ilp[:, 0] >= box_x),
-        ilp[:, 0] - box_x, ilp[:, 0]))
-    irp = irp.at[:, 0].set(jnp.where(
-        (idx_s == n - 1) & irval & (irp[:, 0] < 0),
-        irp[:, 0] + box_x, irp[:, 0]))
+    ilp = ilp.at[:, dim].set(jnp.where(
+        (idx_s == 0) & ilval & (ilp[:, dim] >= box_d),
+        ilp[:, dim] - box_d, ilp[:, dim]))
+    irp = irp.at[:, dim].set(jnp.where(
+        (idx_s == n - 1) & irval & (irp[:, dim] < 0),
+        irp[:, dim] + box_d, irp[:, dim]))
 
     arr_pos = jnp.concatenate([ilp, irp], 0)
     arr_vel = jnp.concatenate([ilv, irv], 0)
@@ -709,39 +898,47 @@ def merge_arrivals(stayers, in_l, in_r, idx_s, spec: DomainSpec, box=None):
 
 def _migrate_local(pos, vel, typ, mask, spec: DomainSpec, spatial_axis,
                    box=None):
-    """Per-shard migration: split -> ppermute both ways -> merge.
+    """Per-shard migration: staged per-axis sweeps of split -> ppermute
+    both ways -> merge.
 
     Fully traceable with static shapes — safe under ``lax.scan`` (the outer
     program folds this into the scanned trajectory at segment cadence).
-    Returns squeezed ``((pos, vel, typ, mask), local_overflow)``; callers
-    pmax the flag over the spatial axis. ``box`` carries the dynamic
-    geometry (slab boundaries move with the barostat); ``None`` keeps the
-    launch-time DomainSpec values.
+    After the axis-a sweep every atom sits in the right brick COLUMN along
+    a; the next sweep routes it within that column, so corner-crossers
+    arrive in two/three hops. Returns squeezed ``((pos, vel, typ, mask),
+    per_axis_overflow (ndim,))``; callers pmax the flags over the spatial
+    axis. ``box`` carries the dynamic geometry (brick boundaries move with
+    the barostat); ``None`` keeps the launch-time DomainSpec values.
     """
-    n = spec.n_slabs
-    idx_s = jax.lax.axis_index(spatial_axis)
-    slab_width = spec.slab_width if box is None else box[0] / float(n)
-    slab_lo = idx_s.astype(jnp.float32) * slab_width
-    stayers, left_pkt, right_pkt, pack_ovf = split_migrants(
-        pos, vel, typ, mask, spec, slab_lo, slab_width)
-    rightp = [(i, (i + 1) % n) for i in range(n)]
-    leftp = [(i, (i - 1) % n) for i in range(n)]
-    in_l = jax.tree.map(lambda t: jax.lax.ppermute(t, spatial_axis, rightp),
-                        right_pkt)     # from left slab
-    in_r = jax.tree.map(lambda t: jax.lax.ppermute(t, spatial_axis, leftp),
-                        left_pkt)      # from right slab
-    merged, m_ovf = merge_arrivals(stayers, in_l, in_r, idx_s, spec, box)
-    return merged, jnp.maximum(pack_ovf, m_ovf)
+    topo = spec.topo
+    idx_s = _flat_rank(spatial_axis)
+    ovfs = []
+    for a in topo.axes:
+        coord = topo.coord_along(idx_s, a)
+        width = (spec.box[a] if box is None else box[a]) / float(topo.shape[a])
+        face_lo = coord.astype(jnp.float32) * width
+        stayers, left_pkt, right_pkt, pack_ovf = split_migrants(
+            pos, vel, typ, mask, spec, face_lo, width, a)
+        in_l = jax.tree.map(
+            lambda t: jax.lax.ppermute(t, spatial_axis, topo.plus_ring(a)),
+            right_pkt)     # from the minus neighbor along a
+        in_r = jax.tree.map(
+            lambda t: jax.lax.ppermute(t, spatial_axis, topo.minus_ring(a)),
+            left_pkt)      # from the plus neighbor along a
+        (pos, vel, typ, mask), m_ovf = merge_arrivals(
+            stayers, in_l, in_r, coord, spec, box, a)
+        ovfs.append(jnp.maximum(pack_ovf, m_ovf))
+    return (pos, vel, typ, mask), jnp.stack(ovfs)
 
 
 def make_migration_step(spec: DomainSpec, mesh: Mesh,
                         spatial_axis: str = "data"):
-    """Move atoms that crossed a slab boundary to the neighbor slab.
+    """Move atoms that crossed a brick boundary to the neighbor brick.
 
     Runs at neighbor-rebuild cadence. Capacity-bounded ppermute sends with
-    overflow flags; periodic wrap in x is applied to the migrated copies.
-    ``migrate(state, box=None)``: pass the current carried box when a
-    barostat moved it (slab boundaries scale with the box).
+    overflow flags; periodic wrap is applied per axis to the migrated
+    copies. ``migrate(state, box=None)``: pass the current carried box when
+    a barostat moved it (brick boundaries scale with the box).
     """
 
     def migrate(state: SlabState, box):
@@ -749,7 +946,8 @@ def make_migration_step(spec: DomainSpec, mesh: Mesh,
         (pos, vel, typ, mask), ovf = _migrate_local(
             pos, vel, typ, mask, spec, spatial_axis, box)
         return SlabState(pos=pos[None], vel=vel[None], typ=typ[None],
-                         mask=mask[None]), jax.lax.pmax(ovf, spatial_axis)
+                         mask=mask[None]), \
+            jax.lax.pmax(jnp.max(ovf), spatial_axis)
 
     state_spec = _state_pspec(spatial_axis)
     sharded = shard_map(migrate, mesh=mesh, in_specs=(state_spec, P()),
@@ -772,18 +970,18 @@ class OuterMDProgram:
     ``run(state, params, n_segments, seg_len, ens, box, baro)`` executes
     ``n_segments x seg_len`` steps as a single jitted shard_map dispatch: a
     two-level ``lax.scan`` per shard — outer over segments (each segment
-    starts with scan-safe migration, then the halo-exchange + rebuild +
-    ensemble step scanned ``seg_len`` times inside; the ensemble state, the
-    DYNAMIC box and the barostat state ride in the carry through both scan
-    levels — migration and the per-step slab geometry read the box the
-    barostat actually produced). Host round-trips drop from one per segment
-    to one per chunk; overflow flags (halo, neighbor, geometry, migration)
-    come back stacked in the thermo fetch and are checked by
-    :func:`check_segment_thermo` once per chunk.
+    starts with scan-safe staged-sweep migration, then the halo-sweep +
+    rebuild + ensemble step scanned ``seg_len`` times inside; the ensemble
+    state, the DYNAMIC box and the barostat state ride in the carry through
+    both scan levels — migration and the per-step brick geometry read the
+    box the barostat actually produced). Host round-trips drop from one per
+    segment to one per chunk; overflow flags (halo, neighbor, geometry,
+    per-axis migration) come back stacked in the thermo fetch and are
+    checked by :func:`check_segment_thermo` once per chunk.
 
     Jitted programs are cached per ``(n_segments, seg_len)``; ``build``
     exposes the raw callable so the production dry-run can lower/compile it
-    at paper scale.
+    at paper scale (including multi-axis spatial topologies).
     """
 
     def __init__(self, cfg: DPConfig, spec: DomainSpec, mesh: Mesh,
@@ -813,7 +1011,7 @@ class OuterMDProgram:
                              "mig_overflow": P()}
 
     def init_ensemble_state(self):
-        """Sharded per-slab ensemble state for :meth:`run` (empty pytree
+        """Sharded per-brick ensemble state for :meth:`run` (empty pytree
         for stateless ensembles)."""
         return init_ensemble_state(self.ensemble, self._spec.n_slabs,
                                    self._mesh, self._spatial_axis)
@@ -824,7 +1022,7 @@ class OuterMDProgram:
         return stepper.pack_box(self._spec.box)
 
     def init_barostat_state(self):
-        """REPLICATED barostat state (every slab draws the same noise)."""
+        """REPLICATED barostat state (every brick draws the same noise)."""
         return (self.barostat.init_state()
                 if self.barostat is not None else ())
 
@@ -834,9 +1032,9 @@ class OuterMDProgram:
 
         thermo leaves are stacked ``(n_segments, seg_len)`` (psum'd scalars
         per step; the stress tensor stacks ``(n_segments, seg_len, 3, 3)``)
-        plus ``mig_overflow`` stacked ``(n_segments,)``. The ensemble,
-        box and barostat state thread through BOTH scan levels in the
-        carry.
+        plus ``mig_overflow`` stacked ``(n_segments, ndim)`` — one flag per
+        staged migration sweep axis. The ensemble, box and barostat state
+        thread through BOTH scan levels in the carry.
         """
         spec, spatial_axis = self._spec, self._spatial_axis
         step_local = self._step_local

@@ -179,6 +179,7 @@ def run_simulation(spec: api.SimulationSpec, params: Any, pos: np.ndarray,
     host_syncs = 1                      # initial build's overflow check
     grid_rebuilds = 0
     grid_key = stepper.grid_key_for(nspec, box_np)
+    ref_box_escal = box_np      # box the last volume fold was taken against
     t0 = time.time()
     step_base = 0
     for seg_len in stepper.segment_schedule(spec.steps, spec.rebuild_every):
@@ -200,14 +201,21 @@ def run_simulation(spec: api.SimulationSpec, params: Any, pos: np.ndarray,
                     grid_rebuilds += 1
             else:
                 box_now = box_np
+            # ref_box folds the carried-box volume into the capacity jump:
+            # a barostat squeeze raises every density at once. The
+            # reference advances to the box each fold was taken against,
+            # so later overflows only fold ADDITIONAL shrink (no
+            # compounding of the same density jump).
             build = stepper.build_neighbors_escalating(
                 pot.layout_cfg(), build.spec, box_now, carry.pos, typ,
-                spec.escalation, dynamic_box=True)
+                spec.escalation, dynamic_box=True,
+                ref_box=ref_box_escal if baro is not None else None)
             host_syncs += 1
             overflow_checks += build.escalations + 1
             overflow_worst = max(overflow_worst, build.overflow)
             if build.escalations:
                 escalations += build.escalations
+                ref_box_escal = box_now
                 pot_run = pot.with_layout(build.spec.sel)
                 eng = stepper.md_segment_engine(pot_run, ens_obj,
                                                 barostat=baro)
@@ -263,6 +271,7 @@ def _run_md_outer(pot: api.Potential, ens_obj: api.Ensemble, params, pos,
     policy = escalation or stepper.EscalationPolicy()
     n = pos.shape[0]
     grid_key = stepper.grid_key_for(build.spec, box_np)
+    ref_box_escal = box_np      # box the last volume fold was taken against
     spec_n = build.spec
     pot_run = pot.with_layout(spec_n.sel)
     donate = stepper.default_donate()
@@ -318,9 +327,20 @@ def _run_md_outer(pot: api.Potential, ens_obj: api.Ensemble, params, pos,
                 if ovf <= 0:
                     carry = out
                     break
+                # fold the carried-box volume ratio into the growth: a
+                # barostat-compressed chunk raises the density everywhere,
+                # so the capacity jump matches it in ONE replay. Advance
+                # the reference box afterwards — a later retry (or later
+                # chunk) only folds ADDITIONAL shrink, never re-applies
+                # the same density jump multiplicatively.
+                box_out = np.asarray(out.box, float)
+                vol_scale = policy.volume_scale(ref_box_escal, box_out)
+                ref_box_escal = box_out
                 spec_n = dataclasses.replace(
-                    spec_n, sel=tuple(policy.grow(s) for s in spec_n.sel),
-                    cell_capacity=policy.grow(spec_n.cell_capacity))
+                    spec_n,
+                    sel=tuple(policy.grow(s, vol_scale) for s in spec_n.sel),
+                    cell_capacity=policy.grow(spec_n.cell_capacity,
+                                              vol_scale))
                 pot_run = pot.with_layout(spec_n.sel)
                 escalations += 1
             carry = stepper.OuterCarry(

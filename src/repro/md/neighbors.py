@@ -34,10 +34,12 @@ class NeighborSpec:
 
 
 #: Overflow-flag sentinel: the DYNAMIC box has shrunk below the static cell
-#: grid's validity (a cell dimension < rcut_nbr, so the 27-stencil no longer
-#: covers the cutoff). Escalating slot capacities cannot fix this — the
-#: driver must re-derive the grid from the current box. Far above any real
-#: capacity excess, so ``flag >= GRID_INVALID`` is unambiguous.
+#: grid's validity (a cell dimension < rcut_nbr, so the +/-1 stencil no
+#: longer covers the cutoff). Raised by both the single-process 27-stencil
+#: here and the brick-frame grid in ``md/slab_cells.py`` (non-periodic on
+#: decomposed topology axes). Escalating slot capacities cannot fix this —
+#: the driver must re-derive the grid from the current box. Far above any
+#: real capacity excess, so ``flag >= GRID_INVALID`` is unambiguous.
 GRID_INVALID = np.int32(1 << 20)
 
 

@@ -1,16 +1,17 @@
-"""O(N) cell-list neighbor search inside one slab (+ ghost shell).
+"""O(N) cell-list neighbor search inside one brick (+ ghost shell).
 
-Geometry is static per DomainSpec: the slab frame spans x in
-[-rc_halo, slab_width + rc_halo) (ghosts included, non-periodic — ghosts ARE
-the periodicity in x), y/z periodic via min-image. All shapes are static so
-the search lowers inside the shard_map'd MD step — this is the path the
-multi-pod MD dry-run compiles at 122,779 atoms/chip (paper weak-scaling
-parity; the brute-force O(N^2) variant is for tests only).
+Geometry is static per DomainSpec: on every DECOMPOSED axis the brick frame
+spans [-rc_halo, width_a + rc_halo) (ghosts included, non-periodic — ghosts
+ARE the periodicity there), undecomposed axes are periodic via min-image.
+A ``(k,)`` topology reproduces the legacy 1-D slab grid exactly. All shapes
+are static so the search lowers inside the shard_map'd MD step — this is
+the path the multi-pod MD dry-run compiles at 122,779 atoms/chip (paper
+weak-scaling parity; the brute-force O(N^2) variant is for tests only).
 """
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 import jax
@@ -20,72 +21,113 @@ from repro.core.types import DPConfig
 from repro.md.neighbors import GRID_INVALID, pack_type_sections
 
 
+def _allowed(n: int, periodic: bool):
+    # With <3 cells on a periodic dim, +/-1 offsets alias the same cell
+    # (duplicate candidates); keep a duplicate-free covering stencil.
+    # Non-periodic dims keep the full stencil: out-of-range offsets are
+    # routed to the always-empty dump row instead of wrapping.
+    if n >= 3 or not periodic:
+        return [-1, 0, 1]
+    return [-1, 0] if n == 2 else [0]
+
+
 def make_slab_neighbor_fn(cfg: DPConfig, box: Tuple[float, float, float],
                           slab_width: float, rc_halo: float,
-                          n_centers: int, cell_capacity: int = 96):
-    """Neighbor lists for ``n_centers`` center atoms of a slab array.
+                          n_centers: int, cell_capacity: int = 96,
+                          topology: Optional[Tuple[int, ...]] = None):
+    """Neighbor lists for ``n_centers`` center atoms of a brick array.
 
-    Returns fn(pos_all, typ_all, mask_all, slab_lo, center_start,
-    box=None, slab_width=None) -> (nlist (n_centers, nsel), overflow);
+    Returns fn(pos_all, typ_all, mask_all, brick_lo, center_start,
+    box=None, widths=None) -> (nlist (n_centers, nsel), overflow);
     ``center_start`` may be traced (model shards pass axis_index *
-    n_centers in atom-decomposition mode). pos_all = owned atoms then
-    ghosts; nlist indexes pos_all rows.
+    n_centers in atom-decomposition mode). pos_all = owned atoms then the
+    staged-sweep ghosts; nlist indexes pos_all rows. ``brick_lo`` is the
+    brick's low-face position: a scalar (legacy 1-D spelling, the x face)
+    or a (3,) vector (undecomposed entries ignored).
 
-    The cell COUNTS are static, derived from the launch-time ``box`` /
-    ``slab_width`` given here; the optional per-call ``box``/``slab_width``
-    (traced values from the carried box under a barostat) move the cell
-    SIZES. If the carried box shrinks until a cell dimension no longer
-    covers ``rc_halo`` (the stencil would miss pairs), the overflow flag
-    returns ``>= GRID_INVALID`` — geometry, not capacity.
+    ``topology`` names the decomposed axes (``None`` -> the legacy
+    ``(k,)`` x-slab layout whose x-width is ``slab_width``). The cell
+    COUNTS are static, derived from the launch-time ``box`` / brick widths
+    given here; the optional per-call ``box``/``widths`` (traced values
+    from the carried box under a barostat) move the cell SIZES. If the
+    carried box shrinks until a cell dimension no longer covers
+    ``rc_halo`` (the stencil would miss pairs), the overflow flag returns
+    ``>= GRID_INVALID`` — geometry, not capacity.
     """
     rc2 = rc_halo * rc_halo
-    # static cell grid over the slab+ghost x-range and the full y/z box
-    x_span = slab_width + 2 * rc_halo
-    ncx = max(int(np.floor(x_span / rc_halo)), 1)
-    ncy = max(int(np.floor(box[1] / rc_halo)), 1)
-    ncz = max(int(np.floor(box[2] / rc_halo)), 1)
-    csx0, csy0, csz0 = x_span / ncx, box[1] / ncy, box[2] / ncz
-    box_static = (float(box[0]), float(box[1]), float(box[2]))
-    slab_width_static = float(slab_width)
-    ncells = ncx * ncy * ncz
+    shape = tuple(int(s) for s in topology) if topology is not None else None
+    ndim = len(shape) if shape is not None else 1
+    box_static = tuple(float(b) for b in box)
+    if shape is not None:
+        widths_static = tuple(box_static[a] / shape[a] for a in range(ndim))
+    else:
+        widths_static = (float(slab_width),)
+    decomposed = tuple(a < ndim for a in range(3))
 
-    def _allowed(n, periodic):
-        # With <3 cells on a periodic dim, +/-1 offsets alias the same cell
-        # (duplicate candidates); keep a duplicate-free covering stencil.
-        if n >= 3 or not periodic:
-            return [-1, 0, 1]
-        return [-1, 0] if n == 2 else [0]
+    # static cell grid: brick+ghost span on decomposed axes (non-periodic —
+    # ghosts cover the wrap), the full box on undecomposed axes (periodic)
+    ncs, cs0 = [], []
+    for a in range(3):
+        if decomposed[a]:
+            span = widths_static[a] + 2 * rc_halo
+        else:
+            span = box_static[a]
+        nc = max(int(np.floor(span / rc_halo)), 1)
+        ncs.append(nc)
+        cs0.append(span / nc)
+    ncx, ncy, ncz = ncs
+    ncells = ncx * ncy * ncz
 
     offsets = np.array([
         (ox, oy, oz)
-        for ox in _allowed(ncx, False)
-        for oy in _allowed(ncy, True)
-        for oz in _allowed(ncz, True)
+        for ox in _allowed(ncx, not decomposed[0])
+        for oy in _allowed(ncy, not decomposed[1])
+        for oz in _allowed(ncz, not decomposed[2])
     ])
-    def fn(pos_all, typ_all, mask_all, slab_lo, center_start=0,
-           box=None, slab_width=None):
+
+    def fn(pos_all, typ_all, mask_all, brick_lo, center_start=0,
+           box=None, widths=None):
+        # brick_lo: scalar (legacy x-face) or vector (per-axis faces)
+        lo_v = jnp.asarray(brick_lo, jnp.float32).reshape(-1)
+        lo = [lo_v[min(a, lo_v.shape[0] - 1)] if decomposed[a] else 0.0
+              for a in range(3)]
         if box is None:
-            csx, csy, csz = csx0, csy0, csz0
+            cs = list(cs0)
             grid_bad = jnp.zeros((), jnp.int32)
-            boxj = jnp.asarray([1e30, box_static[1], box_static[2]],
-                               jnp.float32)
+            boxj = jnp.asarray([1e30 if decomposed[a] else box_static[a]
+                                for a in range(3)], jnp.float32)
         else:
             # dynamic geometry from the carried box: static counts, traced
             # sizes — flag the grid when a cell stops covering rc_halo
-            sw = slab_width if slab_width is not None else slab_width_static
-            csx = (sw + 2 * rc_halo) / ncx
-            csy = box[1] / ncy
-            csz = box[2] / ncz
-            grid_bad = ((csx < rc_halo) | (csy < rc_halo)
-                        | (csz < rc_halo)).astype(jnp.int32)
-            # y/z min-image only: x is ghost-resolved (see domain.py)
-            boxj = jnp.stack([jnp.float32(1e30), box[1], box[2]])
+            cs = []
+            for a in range(3):
+                if decomposed[a]:
+                    w = (widths[a] if widths is not None
+                         else widths_static[a])
+                    cs.append((w + 2 * rc_halo) / ncs[a])
+                else:
+                    cs.append(box[a] / ncs[a])
+            grid_bad = jnp.zeros((), jnp.bool_)
+            for a in range(3):
+                grid_bad = grid_bad | (cs[a] < rc_halo)
+            grid_bad = grid_bad.astype(jnp.int32)
+            # min-image on undecomposed axes only: decomposed axes are
+            # ghost-resolved (see domain.py)
+            boxj = jnp.stack([jnp.float32(1e30) if decomposed[a] else box[a]
+                              for a in range(3)])
         n_all = pos_all.shape[0]
-        # slab-frame x (shifted so the low ghost shell starts at 0)
-        xf = pos_all[:, 0] - slab_lo + rc_halo
-        ci = jnp.clip((xf / csx).astype(jnp.int32), 0, ncx - 1)
-        cj = (jnp.floor(pos_all[:, 1] / csy).astype(jnp.int32)) % ncy
-        ck = (jnp.floor(pos_all[:, 2] / csz).astype(jnp.int32)) % ncz
+        # per-axis cell index: brick frame (shifted so the low ghost shell
+        # starts at 0, clipped) on decomposed axes; periodic bins elsewhere
+        cidx = []
+        for a in range(3):
+            if decomposed[a]:
+                xf = pos_all[:, a] - lo[a] + rc_halo
+                cidx.append(jnp.clip((xf / cs[a]).astype(jnp.int32),
+                                     0, ncs[a] - 1))
+            else:
+                cidx.append(jnp.floor(pos_all[:, a] / cs[a])
+                            .astype(jnp.int32) % ncs[a])
+        ci, cj, ck = cidx
         cflat = (ci * ncy + cj) * ncz + ck
         cflat = jnp.where(mask_all, cflat, ncells)          # park invalid
 
@@ -108,12 +150,19 @@ def make_slab_neighbor_fn(cfg: DPConfig, box: Tuple[float, float, float],
         csl = lambda a: jax.lax.dynamic_slice_in_dim(a, start, n_centers, 0)
         nbr3 = jnp.stack([csl(ci), csl(cj), csl(ck)], -1)
         nbr3 = nbr3[:, None, :] + jnp.asarray(offsets)[None, :, :]
-        # x is NON-periodic in the slab frame (ghosts cover the wrap)
-        nbr_y = nbr3[..., 1] % ncy
-        nbr_z = nbr3[..., 2] % ncz
-        nbrflat = (jnp.clip(nbr3[..., 0], 0, ncx - 1) * ncy + nbr_y) * ncz + nbr_z
-        x_valid = (nbr3[..., 0] >= 0) & (nbr3[..., 0] <= ncx - 1)
-        nbrflat = jnp.where(x_valid, nbrflat, ncells + 1)
+        # decomposed axes are NON-periodic in the brick frame (ghosts cover
+        # the wrap): out-of-range stencil cells go to the dump row
+        valid_cell = jnp.ones(nbr3.shape[:-1], bool)
+        nbrc = []
+        for a in range(3):
+            if decomposed[a]:
+                valid_cell = valid_cell & (nbr3[..., a] >= 0) \
+                    & (nbr3[..., a] <= ncs[a] - 1)
+                nbrc.append(jnp.clip(nbr3[..., a], 0, ncs[a] - 1))
+            else:
+                nbrc.append(nbr3[..., a] % ncs[a])
+        nbrflat = (nbrc[0] * ncy + nbrc[1]) * ncz + nbrc[2]
+        nbrflat = jnp.where(valid_cell, nbrflat, ncells + 1)
         cand = table[nbrflat].reshape(n_centers, len(offsets) * cell_capacity)
         self_idx = start + jnp.arange(n_centers, dtype=jnp.int32)[:, None]
         cand = jnp.where(cand == self_idx, -1, cand)

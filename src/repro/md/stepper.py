@@ -116,9 +116,26 @@ class EscalationPolicy:
     max_attempts: int = 6
     round_to: int = 8
 
-    def grow(self, n: int) -> int:
-        n_new = max(int(n * self.growth), n + 1)
+    def grow(self, n: int, scale: float = 1.0) -> int:
+        """Grow ``n`` by ``max(growth, scale)``.
+
+        ``scale`` folds an external density factor into the capacity
+        decision — the launch-volume / carried-volume ratio under a
+        barostat squeeze — so a replay jumps straight to a capacity that
+        holds the CURRENT density instead of creeping up by ``growth`` per
+        retry (a box compressed 2x in volume doubles every per-region
+        density at once).
+        """
+        factor = max(self.growth, float(scale))
+        n_new = max(int(n * factor), n + 1)
         return -(-n_new // self.round_to) * self.round_to
+
+    @staticmethod
+    def volume_scale(box_ref, box_now) -> float:
+        """Launch-volume / current-volume, clamped >= 1 (grow-only)."""
+        v0 = float(np.prod(np.asarray(box_ref, float).reshape(-1)))
+        v1 = float(np.prod(np.asarray(box_now, float).reshape(-1)))
+        return max(v0 / max(v1, 1e-30), 1.0)
 
 
 class NeighborBuild(NamedTuple):
@@ -165,6 +182,7 @@ def build_neighbors_escalating(
     pos: jax.Array, typ: jax.Array,
     policy: Optional[EscalationPolicy] = None,
     dynamic_box: bool = False,
+    ref_box: Optional[np.ndarray] = None,
 ) -> NeighborBuild:
     """Build the neighbor list; on overflow escalate capacities and retry.
 
@@ -180,9 +198,14 @@ def build_neighbors_escalating(
     re-derived from the CURRENT ``box`` on every call, so the grid is valid
     by construction and only an actual cell-count change recompiles) — the
     form the drivers use now that the box rides in the scan carry.
+    ``ref_box`` (the LAUNCH box) folds the carried-box volume ratio into
+    the first escalation: a barostat-compressed box raises every density
+    at once, so the capacity jump matches it instead of creeping.
     """
     policy = policy or EscalationPolicy()
     box_np = np.asarray(box, float).reshape(-1)
+    scale = (policy.volume_scale(ref_box, box_np)
+             if ref_box is not None else 1.0)
     escalations = 0
     worst = None
     for _ in range(policy.max_attempts):
@@ -198,8 +221,9 @@ def build_neighbors_escalating(
             return NeighborBuild(nlist, cfg_run, spec, escalations, worst)
         spec = dataclasses.replace(
             spec,
-            sel=tuple(policy.grow(s) for s in spec.sel),
-            cell_capacity=policy.grow(spec.cell_capacity))
+            sel=tuple(policy.grow(s, scale) for s in spec.sel),
+            cell_capacity=policy.grow(spec.cell_capacity, scale))
+        scale = 1.0     # the density jump is folded in once
         escalations += 1
     raise RuntimeError(
         f"neighbor capacity overflow persists after {policy.max_attempts} "

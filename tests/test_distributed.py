@@ -10,7 +10,7 @@ import pytest
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _run(script_rel, timeout=900):
+def _run(script_rel, timeout=1800):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     return subprocess.run(

@@ -40,6 +40,75 @@ def test_slab_cells_match_brute(seed):
     assert _sets(ref) == _sets(got)
 
 
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 5000))
+def test_brick_cells_match_brute_2d(seed):
+    """2-D brick frame: x AND y non-periodic (ghost-resolved), z periodic.
+
+    Owned atoms live in the brick, ghosts in the rc-shells of BOTH
+    decomposed axes (including the corner shells the staged sweeps
+    deliver); the cell list must find exactly the brute-force pair set."""
+    cfg = DPConfig(ntypes=1, rcut=3.5, sel=(64,), type_map=("Cu",))
+    rng = np.random.default_rng(seed)
+    box = (24.0, 20.0, 14.0)
+    topology = (2, 2)
+    wx, wy, rc = 12.0, 10.0, 4.0
+    n_own, n_ghost = 24, 24
+    own = np.c_[rng.uniform(0, wx, n_own),
+                rng.uniform(0, wy, n_own),
+                rng.uniform(0, box[2], n_own)]
+    # ghosts across the x faces, y faces, and the corner shells
+    gx = rng.uniform(-rc, wx + rc, n_ghost)
+    gy = rng.uniform(-rc, wy + rc, n_ghost)
+    outside = (gx < 0) | (gx >= wx) | (gy < 0) | (gy >= wy)
+    gx = np.where(outside, gx, -rng.uniform(0, rc, n_ghost))
+    ghost = np.c_[gx, gy, rng.uniform(0, box[2], n_ghost)]
+    pos = jnp.asarray(np.concatenate([own, ghost]), jnp.float32)
+    typ = jnp.zeros(n_own + n_ghost, jnp.int32)
+    mask = jnp.ones(n_own + n_ghost, bool)
+
+    # brute reference: min-image on z only (x/y ghost-resolved)
+    boxm = jnp.asarray([1e30, 1e30, box[2]], jnp.float32)
+    ref, ovf_b = domain._slab_neighbors(pos, typ, mask, cfg, rc * rc, n_own,
+                                        boxm)
+    fn = slab_cells.make_slab_neighbor_fn(cfg, box, wx, rc, n_own,
+                                          topology=topology)
+    lo = jnp.asarray([0.0, 0.0, 0.0], jnp.float32)
+    got, ovf_c = fn(pos, typ, mask, lo, 0)
+    assert int(ovf_b) <= 0 and int(ovf_c) <= 0
+    assert _sets(ref) == _sets(got)
+
+
+def test_brick_cells_dynamic_box_flags_shrunk_grid():
+    """The traced-box path re-sizes cells and raises GRID_INVALID when a
+    cell dimension stops covering rc on any axis."""
+    from repro.md.neighbors import GRID_INVALID
+    cfg = DPConfig(ntypes=1, rcut=3.5, sel=(48,), type_map=("Cu",))
+    rng = np.random.default_rng(3)
+    box = (24.0, 20.0, 14.0)
+    pos = jnp.asarray(np.c_[rng.uniform(0, 12, 32),
+                            rng.uniform(0, 10, 32),
+                            rng.uniform(0, 14, 32)], jnp.float32)
+    typ = jnp.zeros(32, jnp.int32)
+    mask = jnp.ones(32, bool)
+    fn = slab_cells.make_slab_neighbor_fn(cfg, box, 12.0, 4.0, 32,
+                                          topology=(2, 2))
+    lo = jnp.asarray([0.0, 0.0, 0.0], jnp.float32)
+    full, ovf = fn(pos, typ, mask, lo, 0)
+    assert int(ovf) <= 0
+    # same box passed dynamically: same list, still valid
+    dyn, ovf_d = fn(pos, typ, mask, lo, 0,
+                    box=jnp.asarray(box, jnp.float32),
+                    widths=(jnp.float32(12.0), jnp.float32(10.0)))
+    assert int(ovf_d) <= 0
+    assert np.array_equal(np.asarray(full), np.asarray(dyn))
+    # box shrunk until a z cell < rc: geometry flag, not capacity
+    small = jnp.asarray([24.0, 20.0, 7.0], jnp.float32)
+    _, ovf_bad = fn(pos, typ, mask, lo, 0, box=small,
+                    widths=(jnp.float32(12.0), jnp.float32(10.0)))
+    assert int(ovf_bad) >= int(GRID_INVALID)
+
+
 def test_slab_cells_center_slice():
     """Traced center_start gives the corresponding slice of the full list."""
     cfg = DPConfig(ntypes=1, rcut=3.5, sel=(48,), type_map=("Cu",))

@@ -1,0 +1,179 @@
+"""Topology / DomainSpec geometry unit tests (host-side, no devices).
+
+The brick-coordinate maps and per-axis rings are the pure-geometry half of
+the N-D decomposition: everything the shard_map'd step derives (faces,
+widths, ppermute pairs, partition bins) comes from here, so these pin the
+degenerate ``(k,)`` slab equivalence and the C-order rank layout the
+distributed tests rely on.
+"""
+
+import numpy as np
+import pytest
+
+from repro.md import domain, stepper
+from repro.md.topology import Topology
+
+
+def test_parse_spellings():
+    assert Topology.parse("2x2x2").shape == (2, 2, 2)
+    assert Topology.parse("2,4").shape == (2, 4)
+    assert Topology.parse("4").shape == (4,)
+    assert Topology.parse(4).shape == (4,)
+    assert Topology.parse((2, 3)).shape == (2, 3)
+    assert Topology.parse(Topology((2, 2))).shape == (2, 2)
+
+
+def test_shape_validation():
+    with pytest.raises(ValueError):
+        Topology((1, 4))          # 1-brick axes must be dropped, not listed
+    with pytest.raises(ValueError):
+        Topology((2, 2, 2, 2))    # at most 3 spatial axes
+
+
+def test_rank_coord_roundtrip_c_order():
+    topo = Topology((2, 3, 4))
+    assert topo.n_ranks == 24
+    assert topo.strides == (12, 4, 1)
+    for r in range(topo.n_ranks):
+        c = topo.coords_of(r)
+        assert topo.rank_of(c) == r
+        for a in range(3):
+            assert topo.coord_along(r, a) == c[a]
+    # C order: the LAST axis varies fastest
+    assert topo.coords_of(0) == (0, 0, 0)
+    assert topo.coords_of(1) == (0, 0, 1)
+    assert topo.coords_of(4) == (0, 1, 0)
+    assert topo.coords_of(12) == (1, 0, 0)
+
+
+def test_1d_topology_rings_match_legacy_slab_ring():
+    """(k,) must reproduce the legacy slab ring pair lists exactly — the
+    degenerate case that keeps the slab protocol bit-compatible."""
+    k = 5
+    topo = Topology((k,))
+    assert topo.plus_ring(0) == [(i, (i + 1) % k) for i in range(k)]
+    assert topo.minus_ring(0) == [(i, (i - 1) % k) for i in range(k)]
+    for r in range(k):
+        assert topo.coords_of(r) == (r,)
+
+
+def test_2d_rings_shift_one_axis_only():
+    topo = Topology((2, 3))
+    for axis in (0, 1):
+        for src, dst in topo.plus_ring(axis):
+            cs, cd = topo.coords_of(src), topo.coords_of(dst)
+            assert cd[axis] == (cs[axis] + 1) % topo.shape[axis]
+            other = 1 - axis
+            assert cd[other] == cs[other]
+    # plus then minus along the same axis is the identity
+    plus = dict(topo.plus_ring(1))
+    minus = dict(topo.minus_ring(1))
+    for r in range(topo.n_ranks):
+        assert minus[plus[r]] == r
+
+
+def test_domainspec_defaults_to_slab_topology():
+    spec = domain.DomainSpec(box=(24.0, 10.0, 10.0), n_slabs=4,
+                             atom_capacity=8, halo_capacity=4,
+                             rcut_halo=4.5)
+    assert spec.topology == (4,)
+    assert spec.topo.shape == (4,)
+    assert spec.slab_width == 6.0
+    assert spec.brick_widths == (6.0,)
+    spec.validate()
+
+
+def test_domainspec_per_axis_validation():
+    spec = domain.DomainSpec.for_topology((24.0, 10.0, 10.0), (2, 2),
+                                          atom_capacity=8, halo_capacity=4,
+                                          rcut_halo=4.5)
+    assert spec.n_slabs == 4
+    assert spec.brick_widths == (12.0, 5.0)
+    spec.validate()
+    # y bricks of width 10/4 = 2.5 < rcut_halo must be rejected
+    bad = domain.DomainSpec.for_topology((24.0, 10.0, 10.0), (2, 4),
+                                         atom_capacity=8, halo_capacity=4,
+                                         rcut_halo=4.5)
+    with pytest.raises(AssertionError, match="axis 1"):
+        bad.validate()
+    with pytest.raises(AssertionError):
+        domain.DomainSpec(box=(24.0, 10.0, 10.0), n_slabs=4,
+                          atom_capacity=8, halo_capacity=4, rcut_halo=4.5,
+                          topology=(2, 4, 2))   # prod != n_slabs
+
+
+def test_partition_atoms_2d_bins_match_manual():
+    spec = domain.DomainSpec.for_topology((20.0, 18.0, 10.0), (2, 3),
+                                          atom_capacity=32, halo_capacity=8,
+                                          rcut_halo=3.0)
+    rng = np.random.default_rng(0)
+    n = 100
+    pos = rng.uniform(0, 1, (n, 3)) * np.array([20.0, 18.0, 10.0])
+    vel = rng.normal(0, 0.1, (n, 3)).astype(np.float32)
+    typ = rng.integers(0, 2, n).astype(np.int32)
+    state, ovf = domain.partition_atoms(pos.astype(np.float32), vel, typ,
+                                        spec)
+    assert ovf <= 0
+    topo = spec.topo
+    wx, wy = spec.brick_widths
+    mask = np.asarray(state.mask)
+    pos_s = np.asarray(state.pos)
+    assert int(mask.sum()) == n
+    for r in range(topo.n_ranks):
+        cx, cy = topo.coords_of(r)
+        for p in pos_s[r][mask[r]]:
+            assert cx * wx <= p[0] < (cx + 1) * wx + 1e-5
+            assert cy * wy <= p[1] < (cy + 1) * wy + 1e-5
+    # gather is the exact inverse (as multisets of rows)
+    gp, gv, gt = domain.gather_atoms(state)
+    assert sorted(map(tuple, gp.round(5))) == \
+        sorted(map(tuple, pos.astype(np.float32).round(5)))
+
+
+def test_partition_atoms_box_override_rebins():
+    """A squeezed carried box must re-bin by the CURRENT widths."""
+    spec = domain.DomainSpec.for_topology((20.0, 10.0, 10.0), (2,),
+                                          atom_capacity=8, halo_capacity=4,
+                                          rcut_halo=3.0)
+    pos = np.array([[9.0, 1.0, 1.0]], np.float32)   # brick 0 at launch
+    vel = np.zeros((1, 3), np.float32)
+    typ = np.zeros(1, np.int32)
+    state, _ = domain.partition_atoms(pos, vel, typ, spec)
+    assert bool(state.mask[0, 0]) and not bool(state.mask[1].any())
+    # box squeezed to 16: width 8 -> x=9 now belongs to brick 1
+    state2, _ = domain.partition_atoms(pos, vel, typ, spec,
+                                       box=np.array([16.0, 10.0, 10.0]))
+    assert bool(state2.mask[1, 0]) and not bool(state2.mask[0].any())
+
+
+def test_escalation_policy_grow_folds_scale():
+    policy = stepper.EscalationPolicy(growth=1.6, round_to=8)
+    assert policy.grow(64) == policy.grow(64, 1.0)
+    # scale above growth dominates; below growth, growth wins
+    assert policy.grow(64, 2.5) >= 160
+    assert policy.grow(64, 1.1) == policy.grow(64)
+    assert policy.volume_scale((10, 10, 10), (8, 8, 8)) == \
+        pytest.approx(1000 / 512)
+    assert policy.volume_scale((10, 10, 10), (12, 12, 12)) == 1.0  # clamped
+
+
+def test_escalate_capacities_folds_volume_and_rebases_box():
+    policy = stepper.EscalationPolicy(growth=1.6, round_to=8)
+    spec = domain.DomainSpec.for_topology((20.0, 20.0, 20.0), (2, 2),
+                                          atom_capacity=96, halo_capacity=64,
+                                          rcut_halo=4.5)
+    box_now = np.array([16.0, 16.0, 16.0])      # volume ratio 1.953
+    new = domain.escalate_capacities(spec, policy, box_now=box_now,
+                                     n_model=4)
+    scale = domain.capacity_scale_for_box(spec, box_now)
+    assert scale == pytest.approx((20 / 16) ** 3)
+    assert new.halo_capacity >= int(64 * scale) - policy.round_to
+    assert new.halo_capacity > policy.grow(64)          # the fold mattered
+    assert new.atom_capacity % 4 == 0
+    assert new.atom_capacity >= int(96 * scale) - 4 - policy.round_to
+    assert new.box == tuple(box_now)        # static grids re-derive from it
+    assert new.topology == (2, 2)
+    # no box: plain geometric growth, box kept
+    plain = domain.escalate_capacities(spec, policy)
+    assert plain.box == spec.box
+    assert plain.halo_capacity == policy.grow(64)
